@@ -1,0 +1,151 @@
+"""Benchmark harness: one entry per paper table/figure + framework benches.
+
+  python -m benchmarks.run                 # everything (except dry-run)
+  python -m benchmarks.run --only fig2     # one artifact
+Artifacts: fig2, table2, fig3, throughput, locality, kernels, mapreduce,
+roofline (reads benchmarks/results/dryrun_*.jsonl produced by
+``python -m repro.launch.dryrun``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results"
+
+
+def bench_paper(only=None):
+    from benchmarks import paper_repro as pr
+    out = {}
+    if only in (None, "fig2"):
+        out["fig2"] = pr.fig2_completion_times()
+    if only in (None, "table2"):
+        out["table2"] = pr.table2_slot_allocation()
+    if only in (None, "fig3"):
+        out["fig3"] = pr.fig3_job_comparison()
+    if only in (None, "throughput"):
+        out["throughput"] = pr.throughput_gain()
+    if only in (None, "locality"):
+        out["locality"] = pr.locality_stats()
+    return out
+
+
+def bench_kernels():
+    """Micro-bench the kernels in interpret mode (correctness-path timing;
+    TPU wall-time is not measurable on this CPU container)."""
+    import jax, jax.numpy as jnp
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.ssd_scan.ops import ssd
+    from repro.kernels.ssd_scan.ref import ssd_ref
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64))
+    k = jax.random.normal(ks[1], (1, 4, 256, 64))
+    v = jax.random.normal(ks[2], (1, 4, 256, 64))
+    for name, fn in (("flash_attention.interp",
+                      lambda: flash_attention(q, k, v, q_block=128,
+                                              kv_block=128, interpret=True)),
+                     ("attention.ref", lambda: attention_ref(q, k, v))):
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(fn())
+        rows.append({"name": name,
+                     "us_per_call": (time.perf_counter() - t0) / 3 * 1e6})
+    x = jax.random.normal(ks[0], (1, 256, 4, 16)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 4)))
+    A = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.3)
+    B_ = jax.random.normal(ks[1], (1, 256, 1, 8)) * 0.3
+    C = jax.random.normal(ks[2], (1, 256, 1, 8)) * 0.3
+    for name, fn in (("ssd_scan.interp",
+                      lambda: ssd(x, dt, A, B_, C, chunk=64, interpret=True)),
+                     ("ssd.ref", lambda: ssd_ref(x, dt, A, B_, C)[0])):
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(fn())
+        rows.append({"name": name,
+                     "us_per_call": (time.perf_counter() - t0) / 3 * 1e6})
+    print("\n== kernel micro-bench (interpret-mode, CPU) ==")
+    for r in rows:
+        print(f"  {r['name']:28s} {r['us_per_call']:12.0f} us")
+    return rows
+
+
+def bench_mapreduce():
+    from repro.mapreduce import MRJob, run_mapreduce
+    rows = []
+    print("\n== MapReduce engine (jitted, CPU) ==")
+    for w in ("wordcount", "grep", "sort", "permutation", "inverted_index"):
+        job = MRJob(workload=w, n_blocks=16, block_tokens=8192, n_reducers=8)
+        t0 = time.perf_counter()
+        out = run_mapreduce(job)
+        dt = time.perf_counter() - t0
+        rows.append({"workload": w, "ms": dt * 1e3, "checksum": int(out.sum())})
+        print(f"  {w:16s} {dt*1e3:8.1f} ms  checksum={int(out.sum())}")
+    return rows
+
+
+def bench_roofline():
+    import statistics
+    from repro.analysis.roofline import load_rows, to_markdown
+    path = RESULTS / "dryrun_baseline.jsonl"
+    if not path.exists():
+        print("\n== roofline: no dry-run results (run python -m repro.launch.dryrun) ==")
+        return []
+    rows = load_rows(path)
+    (RESULTS / "roofline_baseline.md").write_text(to_markdown(rows))
+    print(f"\n== roofline: {len(rows)} single-pod cells "
+          f"(tables -> benchmarks/results/roofline_{{baseline,optimized}}.md) ==")
+    worst = sorted(rows, key=lambda r: r.roofline_fraction)[:3]
+    for r in worst:
+        print(f"  baseline worst: {r.arch} {r.shape} "
+              f"frac={r.roofline_fraction:.1%} bottleneck={r.bottleneck}")
+    out = [{"arch": r.arch, "shape": r.shape, "tag": "baseline",
+            "roofline_fraction": r.roofline_fraction,
+            "bottleneck": r.bottleneck} for r in rows]
+    opath = RESULTS / "dryrun_optimized.jsonl"
+    if opath.exists():
+        orows = {(r.arch, r.shape): r for r in load_rows(opath)}
+        (RESULTS / "roofline_optimized.md").write_text(
+            to_markdown(list(orows.values())))
+        gains = [(r.arch, r.shape, r.step_s / orows[(r.arch, r.shape)].step_s)
+                 for r in rows if (r.arch, r.shape) in orows
+                 and orows[(r.arch, r.shape)].step_s > 0]
+        geo = statistics.geometric_mean(g for _, _, g in gains)
+        print(f"  optimized vs baseline: geomean step gain {geo:.2f}x "
+              f"over {len(gains)} cells; top:")
+        for a, s, g in sorted(gains, key=lambda x: -x[2])[:5]:
+            print(f"    {g:5.2f}x  {a} {s}")
+        out += [{"arch": a, "shape": s, "tag": "gain", "step_gain": g}
+                for a, s, g in gains]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=[None, "fig2", "table2", "fig3", "throughput",
+                             "locality", "kernels", "mapreduce", "roofline"])
+    args = ap.parse_args()
+    RESULTS.mkdir(exist_ok=True)
+    out = {}
+    if args.only in (None, "fig2", "table2", "fig3", "throughput", "locality"):
+        out.update(bench_paper(args.only))
+    if args.only in (None, "kernels"):
+        out["kernels"] = bench_kernels()
+    if args.only in (None, "mapreduce"):
+        out["mapreduce"] = bench_mapreduce()
+    if args.only in (None, "roofline"):
+        out["roofline"] = bench_roofline()
+    with open(RESULTS / "bench_summary.json", "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"\nsummary -> {RESULTS / 'bench_summary.json'}")
+
+
+if __name__ == "__main__":
+    main()

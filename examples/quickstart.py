@@ -1,0 +1,47 @@
+"""Quickstart: train a tiny llama-family model for a few steps on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, ShardedDataset, make_batch_iter
+from repro.launch.steps import make_train_step
+from repro.models.common import get_model
+from repro.optim import AdamWConfig, adamw_init
+
+
+def main(steps: int = 20) -> None:
+    cfg = get_smoke_config("llama3.2-3b").replace(num_layers=4, d_model=256,
+                                                  n_heads=8, n_kv_heads=4,
+                                                  d_ff=512)
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params ({cfg.num_layers}L d={cfg.d_model})")
+
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=128, global_batch=8,
+                      num_shards=16)
+    ds = ShardedDataset(data, num_hosts=1)
+    batches = make_batch_iter(ds, hosts=[0])
+
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=steps)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, opt_cfg, grad_accum=1))
+
+    t0 = time.time()
+    for i in range(steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in next(batches).items()}
+        params, opt, metrics = step(params, opt, batch)
+        if i % 5 == 0 or i == steps - 1:
+            print(f"step {i:3d}  loss {float(metrics['loss']):.4f}")
+    dt = time.time() - t0
+    toks = steps * data.global_batch * data.seq_len
+    print(f"done: {dt:.1f}s  ({toks/dt:.0f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

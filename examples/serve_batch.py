@@ -1,0 +1,57 @@
+"""Batched serving demo: prefill a batch of prompts, then decode with the
+KV cache — the serve-side path that the decode_* dry-run cells lower.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models.common import get_model
+
+
+def main(batch: int = 4, prompt_len: int = 48, gen_tokens: int = 32) -> None:
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (batch, prompt_len), 0, cfg.vocab_size)
+    max_len = prompt_len + gen_tokens
+
+    # prefill into a max_len cache: run prefill, then copy into a padded cache
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    t0 = time.time()
+    logits, cache = prefill(params, {"tokens": prompts})
+    pad = max_len - prompt_len
+    cache = {
+        "k": jnp.pad(cache["k"], ((0, 0),) * 3 + ((0, pad), (0, 0))),
+        "v": jnp.pad(cache["v"], ((0, 0),) * 3 + ((0, pad), (0, 0))),
+        "len": cache["len"],
+    }
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    out_tokens = [tok]
+    t0 = time.time()
+    for _ in range(gen_tokens - 1):
+        logits, cache = decode(params, cache, {"tokens": tok})
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"prefill: {batch}x{prompt_len} tokens in {t_prefill*1e3:.0f} ms")
+    print(f"decode:  {gen_tokens-1} steps in {t_decode*1e3:.0f} ms "
+          f"({batch*(gen_tokens-1)/t_decode:.0f} tok/s)")
+    print("sample generated ids:", gen[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

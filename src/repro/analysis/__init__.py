@@ -1,0 +1,1 @@
+from repro.analysis.hlo import analyze_hlo, HloSummary

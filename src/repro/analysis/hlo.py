@@ -1,0 +1,273 @@
+"""Structural analysis of optimized HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits a ``while`` body ONCE —
+for scan-over-layers programs it under-counts FLOPs and bytes by ~L×.  This
+module parses the optimized HLO, builds the computation call graph with
+known trip counts (XLA annotates ``known_trip_count`` on while ops), and
+reports *trip-scaled*:
+
+* dot/convolution FLOPs,
+* per-collective wire bytes (ring-model per device):
+    all-gather      (g-1)/g · out_bytes
+    reduce-scatter  (g-1)   · out_bytes          (= (g-1)/g · in_bytes)
+    all-reduce      2(g-1)/g · bytes
+    all-to-all      (g-1)/g · bytes
+    collective-permute  bytes
+
+Used by the dry-run to derive the roofline collective term and to validate
+the analytic FLOPs model.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[\"\s:{]+n[\"\s:]+\"?(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shapes_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.group(1), m.group(2)
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class HloOp:
+    name: str
+    text: str
+
+
+@dataclass
+class HloComputation:
+    name: str
+    ops: List[HloOp] = field(default_factory=list)
+    # name -> result type string (for operand shape lookup)
+    types: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class HloSummary:
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    hbm_bytes: float = 0.0            # trip-scaled materialization traffic
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    unknown_trip_loops: int = 0
+    per_collective: List[Dict] = field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    @property
+    def total_flops(self) -> float:
+        return self.dot_flops + self.conv_flops
+
+    def to_json(self) -> Dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "conv_flops": self.conv_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "total_collective_bytes": self.total_collective_bytes,
+            "unknown_trip_loops": self.unknown_trip_loops,
+        }
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, HloComputation], Optional[str]]:
+    comps: Dict[str, HloComputation] = {}
+    entry = None
+    cur: Optional[HloComputation] = None
+    for line in text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip()) if "{" in line and "->" in line else None
+        if m and not line.lstrip().startswith("//"):
+            cur = HloComputation(m.group(1))
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            name, rest = om.group(1), om.group(2)
+            cur.ops.append(HloOp(name, rest))
+            cur.types[name] = rest
+    return comps, entry
+
+
+def _group_size(text: str, default: int = 1) -> int:
+    m = _GROUPS_LIST_RE.search(text)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(text)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _dot_flops(op: HloOp, comp: HloComputation) -> float:
+    """2 * prod(out_dims) * prod(contracting dims of lhs)."""
+    out = _shape_dims(op.text.split(" dot(")[0])
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    m = re.search(r"dot\(([^)]*)\)", op.text)
+    if not m:
+        return 0.0
+    operands = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+    cm = _CONTRACT_RE.search(op.text)
+    if not operands or cm is None:
+        return 0.0
+    lhs_type = comp.types.get(operands[0], "")
+    lhs = _shape_dims(lhs_type.split("=")[0] if "=" in lhs_type else lhs_type)
+    if lhs is None:
+        # operand may be a parameter: search type in its defining text anyway
+        return 0.0
+    _, lhs_dims = lhs
+    kprod = 1
+    if cm.group(1):
+        for d in cm.group(1).split(","):
+            kprod *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * kprod
+
+
+def analyze_hlo(text: str) -> HloSummary:
+    comps, entry = parse_computations(text)
+    s = HloSummary()
+    if entry is None:
+        return s
+
+    # multipliers via BFS from entry
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # repeatedly propagate (call graph is a DAG; few passes suffice)
+    for _ in range(64):
+        changed = False
+        for cname, comp in comps.items():
+            m0 = mult.get(cname, 0.0)
+            if m0 == 0.0:
+                continue
+            for op in comp.ops:
+                if " while(" in op.text:
+                    bm = _BODY_RE.search(op.text)
+                    tm = _TRIP_RE.search(op.text)
+                    trip = int(tm.group(1)) if tm else 1
+                    if tm is None:
+                        s.unknown_trip_loops += 1
+                    if bm:
+                        tgt = bm.group(1)
+                        val = m0 * trip
+                        if mult.get(tgt, 0.0) < val:
+                            mult[tgt] = val
+                            changed = True
+                    cm_ = _COND_RE.search(op.text)
+                    if cm_:
+                        tgt = cm_.group(1)
+                        val = m0 * (trip + 1)
+                        if mult.get(tgt, 0.0) < val:
+                            mult[tgt] = val
+                            changed = True
+                elif " call(" in op.text or "fusion(" in op.text or "conditional(" in op.text:
+                    for tgt in _CALLS_RE.findall(op.text):
+                        if mult.get(tgt, 0.0) < m0:
+                            mult[tgt] = m0
+                            changed = True
+        if not changed:
+            break
+
+    for cname, comp in comps.items():
+        m0 = mult.get(cname, 0.0)
+        if m0 == 0.0:
+            continue
+        for op in comp.ops:
+            txt = op.text
+            # HBM-traffic model: every materializing top-level op writes its
+            # output once and that buffer is read ~once by its consumer, so
+            # traffic ≈ 2 × Σ output bytes (fusion internals never hit HBM).
+            # Excluded: control/aliasing ops that produce no new buffer.
+            mop = re.match(r"\s*(?:\([^=]*\)|\S+)\s+(\w[\w\-]*)\(", txt)
+            opname = mop.group(1) if mop else ""
+            if opname and opname not in (
+                    "parameter", "tuple", "get-tuple-element", "constant",
+                    "while", "conditional", "bitcast", "custom-call",
+                    "after-all", "partition-id", "replica-id"):
+                result_type = txt.split(f" {opname}(")[0]
+                s.hbm_bytes += 2.0 * m0 * _shapes_bytes(result_type)
+            if " dot(" in txt:
+                s.dot_flops += m0 * _dot_flops(op, comp)
+            elif " convolution(" in txt:
+                # approximate: 2 * out_elems * (window elems * in_ch) unknown
+                out = _shape_dims(txt)
+                if out:
+                    n = 1
+                    for d in out[1]:
+                        n *= d
+                    s.conv_flops += m0 * 2 * n
+            for coll in COLLECTIVES:
+                token = f" {coll}(" if f" {coll}(" in txt else (
+                    f" {coll}-start(" if f" {coll}-start(" in txt else None)
+                if token is None:
+                    continue
+                g = _group_size(txt)
+                type_str = txt.split(token)[0]
+                nbytes = _shapes_bytes(type_str)
+                if coll == "all-gather":
+                    wire = nbytes * (g - 1) / max(g, 1)
+                elif coll == "reduce-scatter":
+                    wire = nbytes * (g - 1)
+                elif coll == "all-reduce":
+                    wire = 2 * nbytes * (g - 1) / max(g, 1)
+                elif coll == "all-to-all":
+                    wire = nbytes * (g - 1) / max(g, 1)
+                else:
+                    wire = nbytes
+                s.collective_bytes[coll] = s.collective_bytes.get(coll, 0.0) + m0 * wire
+                s.collective_counts[coll] = s.collective_counts.get(coll, 0) + 1
+                s.per_collective.append(
+                    {"comp": cname, "op": coll, "bytes": nbytes, "group": g,
+                     "mult": m0, "wire_bytes": m0 * wire})
+                break
+    return s

@@ -1,0 +1,39 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the full assigned configuration;
+``get_smoke_config(arch_id)`` returns the reduced same-family config used by
+CPU smoke tests (full configs are only ever lowered abstractly).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+ALL_ARCHS: List[str] = [
+    "mamba2-1.3b",
+    "zamba2-1.2b",
+    "nemotron-4-15b",
+    "llama3.2-3b",
+    "tinyllama-1.1b",
+    "stablelm-3b",
+    "mixtral-8x22b",
+    "deepseek-v2-lite-16b",
+    "whisper-large-v3",
+    "qwen2-vl-2b",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "p") for a in ALL_ARCHS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise ValueError(f"unknown arch {arch!r}; have {ALL_ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.smoke()

@@ -1,0 +1,122 @@
+"""Baseline schedulers the paper evaluates against.
+
+* ``FairScheduler`` — Hadoop Fair Scheduler semantics [paper ref 3]: equal
+  instantaneous share per active job; on each heartbeat the job furthest
+  below its fair share is served first.  Optional *delay scheduling*
+  [Zaharia, EuroSys'10 — paper ref 16]: a job skips up to ``locality_delay``
+  scheduling opportunities while it has no local task on the offered node.
+* ``FIFOScheduler`` — Hadoop default: submission order.
+
+Neither baseline uses deadlines, the resource estimator, or the
+reconfigurator — that is the paper's point of comparison.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.scheduler import Launch, SchedulerBase
+from repro.core.types import ClusterSpec, JobRuntime, TaskId, TaskKind
+
+
+class FairScheduler(SchedulerBase):
+    name = "fair"
+
+    def __init__(self, spec: ClusterSpec, locality_delay: int = 0):
+        super().__init__(spec)
+        self.locality_delay = locality_delay
+        self._skips: Dict[str, int] = {}
+
+    def _running_slots(self, job: JobRuntime) -> int:
+        return len(job.running_map) + len(job.running_reduce)
+
+    def select(self, node: int, free_map: int, free_reduce: int,
+               now: float) -> List[Launch]:
+        out: List[Launch] = []
+        while free_map > 0 or free_reduce > 0:
+            jobs = [j for j in self.active_jobs()]
+            if not jobs:
+                break
+            # deficit order: fewest running tasks relative to fair share
+            jobs.sort(key=lambda j: (self._running_slots(j),
+                                     j.spec.submit_time))
+            launched = False
+            for job in jobs:
+                jid = job.spec.job_id
+                if free_map > 0 and not job.map_finished:
+                    local = self._local_map_candidates(job, node)
+                    if local:
+                        idx = local[0]
+                        self._skips[jid] = 0
+                        t = TaskId(jid, TaskKind.MAP, idx)
+                        out.append(Launch(t, node, local=True))
+                        job.running_map[idx] = node
+                        job.local_map_launches += 1
+                        free_map -= 1
+                        launched = True
+                        break
+                    unstarted = self._unstarted_map_tasks(job)
+                    if unstarted:
+                        if self._skips.get(jid, 0) < self.locality_delay:
+                            self._skips[jid] = self._skips.get(jid, 0) + 1
+                            continue   # delay scheduling: wait for locality
+                        self._skips[jid] = 0
+                        idx = unstarted[0]
+                        t = TaskId(jid, TaskKind.MAP, idx)
+                        out.append(Launch(t, node, local=False))
+                        job.running_map[idx] = node
+                        job.remote_map_launches += 1
+                        free_map -= 1
+                        launched = True
+                        break
+                if free_reduce > 0 and job.map_finished and not job.finished:
+                    unstarted = self._unstarted_reduce_tasks(job)
+                    if unstarted:
+                        idx = unstarted[0]
+                        t = TaskId(jid, TaskKind.REDUCE, idx)
+                        out.append(Launch(t, node, local=True))
+                        job.running_reduce[idx] = node
+                        free_reduce -= 1
+                        launched = True
+                        break
+            if not launched:
+                break
+        return out
+
+
+class FIFOScheduler(SchedulerBase):
+    name = "fifo"
+
+    def select(self, node: int, free_map: int, free_reduce: int,
+               now: float) -> List[Launch]:
+        out: List[Launch] = []
+        for jid in self.order:
+            job = self.jobs[jid]
+            if job.finished:
+                continue
+            while free_map > 0 and not job.map_finished:
+                local = self._local_map_candidates(job, node)
+                cand = local or self._unstarted_map_tasks(job)
+                if not cand:
+                    break
+                idx = cand[0]
+                is_local = bool(local)
+                out.append(Launch(TaskId(jid, TaskKind.MAP, idx), node,
+                                  local=is_local))
+                job.running_map[idx] = node
+                if is_local:
+                    job.local_map_launches += 1
+                else:
+                    job.remote_map_launches += 1
+                free_map -= 1
+            while (free_reduce > 0 and job.map_finished and not job.finished):
+                unstarted = self._unstarted_reduce_tasks(job)
+                if not unstarted:
+                    break
+                idx = unstarted[0]
+                out.append(Launch(TaskId(jid, TaskKind.REDUCE, idx), node,
+                                  local=True))
+                job.running_reduce[idx] = node
+                free_reduce -= 1
+            if free_map <= 0 and free_reduce <= 0:
+                break
+        return out

@@ -1,0 +1,161 @@
+"""Resource Reconfigurator — paper §4.1, Algorithm 1.
+
+Per-physical-machine **Assign Queues (AQ)** and **Release Queues (RQ)**:
+
+* a VM with a surplus free core registers it in its machine's RQ;
+* a map task that *should* run data-locally on VM ``p`` (but ``p`` has no free
+  slot) is parked in machine(p)'s AQ;
+* whenever both queues of one machine are non-empty, a vCPU is hot-unplugged
+  from the releasing VM and hot-plugged into the target VM (latency
+  ``ClusterSpec.hotplug_latency``), and the parked task launches data-locally.
+
+The queues are decoupled exactly as in the paper: releases are lazy,
+assignment waits until the machine actually has a donor core.  CPU never
+crosses a physical machine boundary (paper: "CPU resource cannot be
+transferred beyond the physical system boundary").
+
+A parked task that waits longer than ``max_wait`` is handed back to the
+scheduler for a remote launch — the paper observes this wait is negligible
+("tasks ... finish in less than a minute"), but an implementation must bound
+it to protect deadlines.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.core.types import ClusterSpec, TaskId
+
+
+@dataclass
+class ParkedTask:
+    task: TaskId
+    target_vm: int
+    parked_at: float
+
+
+@dataclass
+class PendingPlug:
+    """A matched release->assign pair in flight (hot-plug latency)."""
+    machine: int
+    from_vm: int
+    to_vm: int
+    task: TaskId
+    ready_at: float
+
+
+class Reconfigurator:
+    """Tracks AQ/RQ per machine and per-VM vCPU counts."""
+
+    def __init__(self, spec: ClusterSpec, max_wait: float = 15.0):
+        self.spec = spec
+        self.max_wait = max_wait
+        self.vcpus: List[int] = [spec.base_map_slots] * spec.num_nodes
+        self.aq: List[Deque[ParkedTask]] = [deque() for _ in range(spec.num_machines)]
+        self.rq: List[Deque[int]] = [deque() for _ in range(spec.num_machines)]  # vm ids
+        self.in_flight: List[PendingPlug] = []
+        # host-integration hook: validates that an offered core is still free
+        # (an RQ entry goes stale when the VM re-occupies the core before the
+        # match).  Set by the simulator / fleet runtime.
+        self.validator: Optional[Callable[[int], bool]] = None
+        self.stats = {"reconfigurations": 0, "parked": 0, "expired": 0,
+                      "total_wait": 0.0}
+
+    def _valid_donor(self, vm: int) -> bool:
+        if self.vcpus[vm] <= self.spec.min_vcpus_per_vm:
+            return False
+        return self.validator(vm) if self.validator is not None else True
+
+    # -- queue registration (Algorithm 1 lines 4-12) -----------------------
+    def aq_len(self, vm: int) -> int:
+        return sum(1 for t in self.aq[self.spec.machine_of(vm)]
+                   if t.target_vm == vm)
+
+    def rq_len(self, vm: int) -> int:
+        """Count of *currently valid* donor offers on vm's machine."""
+        return sum(1 for cand in self.rq[self.spec.machine_of(vm)]
+                   if cand != vm and self._valid_donor(cand))
+
+    def park_task(self, task: TaskId, target_vm: int, now: float) -> None:
+        """AQ entry: task waits for a core on target_vm's machine."""
+        self.aq[self.spec.machine_of(target_vm)].append(
+            ParkedTask(task, target_vm, now))
+        self.stats["parked"] += 1
+
+    def release_core(self, vm: int, now: float) -> None:
+        """RQ entry: vm offers one core (never below min_vcpus)."""
+        if self.vcpus[vm] <= self.spec.min_vcpus_per_vm:
+            return
+        self.rq[self.spec.machine_of(vm)].append(vm)
+
+    def cancel_parked(self, task: TaskId) -> bool:
+        for q in self.aq:
+            for item in list(q):
+                if item.task == task:
+                    q.remove(item)
+                    return True
+        return False
+
+    # -- matching ------------------------------------------------------------
+    def match(self, now: float, donor_ok=None) -> List[PendingPlug]:
+        """Pair AQ/RQ entries per machine; returns newly started hot-plugs.
+
+        ``donor_ok(vm)`` lets the caller veto donors whose offered core got
+        re-occupied between the offer and the match."""
+        started = []
+        for m in range(self.spec.num_machines):
+            while self.aq[m] and self.rq[m]:
+                parked = self.aq[m].popleft()
+                donor = None
+                while self.rq[m]:
+                    cand = self.rq[m].popleft()
+                    if (cand != parked.target_vm and self._valid_donor(cand)
+                            and (donor_ok is None or donor_ok(cand))):
+                        donor = cand
+                        break
+                    # stale / self-targeted offer: drop it
+                if donor is None:
+                    self.aq[m].appendleft(parked)
+                    break
+                if self.vcpus[parked.target_vm] >= self.spec.max_vcpus_per_vm:
+                    # target saturated: requeue task, put donor back
+                    self.rq[m].append(donor)
+                    self.aq[m].append(parked)
+                    break
+                self.vcpus[donor] -= 1
+                plug = PendingPlug(m, donor, parked.target_vm, parked.task,
+                                   now + self.spec.hotplug_latency)
+                self.in_flight.append(plug)
+                started.append(plug)
+                self.stats["reconfigurations"] += 1
+                self.stats["total_wait"] += now - parked.parked_at
+        return started
+
+    def complete_plugs(self, now: float) -> List[PendingPlug]:
+        """Hot-plugs whose latency elapsed; caller launches the task."""
+        done = [p for p in self.in_flight if p.ready_at <= now]
+        self.in_flight = [p for p in self.in_flight if p.ready_at > now]
+        for p in done:
+            self.vcpus[p.to_vm] += 1
+        return done
+
+    def expire_stale(self, now: float) -> List[ParkedTask]:
+        """Parked tasks past max_wait -> hand back for remote launch."""
+        out = []
+        for q in self.aq:
+            for item in list(q):
+                if now - item.parked_at > self.max_wait:
+                    q.remove(item)
+                    out.append(item)
+                    self.stats["expired"] += 1
+        return out
+
+    def next_event_time(self) -> Optional[float]:
+        if not self.in_flight:
+            return None
+        return min(p.ready_at for p in self.in_flight)
+
+    @property
+    def total_vcpus(self) -> int:
+        return sum(self.vcpus) + len(self.in_flight)

@@ -1,0 +1,280 @@
+"""Completion-time based scheduler — paper §4.2, Algorithm 2 (+ Algorithm 1
+for map-task assignment through resource reconfiguration).
+
+Policy, exactly as the paper states it:
+
+* jobs with no completed or running tasks take precedence (oldest first) so
+  the online estimator can bootstrap (initial tasks give the Eq.-1 sample);
+* remaining jobs are sorted by EDF (ascending deadline);
+* a job only receives map slots while ``scheduled_maps < n_m`` and reduce
+  slots while ``scheduled_reduces < n_r`` (Eq. 10 demand, recomputed on every
+  task completion with remaining work and remaining time);
+* reduces launch only after the job's map phase finishes (Algorithm 2 l.10);
+* map assignment prefers a data-local task on the heartbeating node; a
+  non-local candidate is parked for VM reconfiguration on a node that holds
+  its data (Algorithm 1): AQ entry on the data node's machine, RQ entry on
+  the heartbeating node's machine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.estimator import OnlineEstimator
+from repro.core.reconfigurator import Reconfigurator
+from repro.core.types import (ClusterSpec, JobRuntime, JobSpec, TaskId,
+                              TaskKind)
+
+
+@dataclass
+class Launch:
+    """Scheduler decision: run task on node (immediately)."""
+    task: TaskId
+    node: int
+    local: bool
+    via_reconfig: bool = False
+
+
+class SchedulerBase:
+    """Common bookkeeping shared by all scheduler policies."""
+
+    name = "base"
+    uses_reconfig = False
+
+    def __init__(self, spec: ClusterSpec):
+        self.spec = spec
+        self.jobs: Dict[str, JobRuntime] = {}
+        self.order: List[str] = []          # submission order
+
+    # -- lifecycle ----------------------------------------------------------
+    def job_added(self, job: JobSpec, now: float) -> None:
+        rt = JobRuntime(spec=job)
+        self.jobs[job.job_id] = rt
+        self.order.append(job.job_id)
+        self.on_job_added(rt, now)
+
+    def on_job_added(self, job: JobRuntime, now: float) -> None:
+        pass
+
+    def task_started(self, task: TaskId, node: int, now: float) -> None:
+        job = self.jobs[task.job_id]
+        if task.kind == TaskKind.MAP:
+            job.running_map[task.index] = node
+        else:
+            job.running_reduce[task.index] = node
+
+    def task_finished(self, task: TaskId, node: int, now: float,
+                      duration: float) -> None:
+        job = self.jobs[task.job_id]
+        if task.kind == TaskKind.MAP:
+            job.running_map.pop(task.index, None)
+            job.completed_map.add(task.index)
+            job.map_durations.append(duration)
+        else:
+            job.running_reduce.pop(task.index, None)
+            job.completed_reduce.add(task.index)
+            job.reduce_durations.append(duration)
+        if job.finished and job.finish_time is None:
+            job.finish_time = now
+        self.on_task_finished(job, task, now)
+
+    def on_task_finished(self, job: JobRuntime, task: TaskId, now: float) -> None:
+        pass
+
+    # -- helpers --------------------------------------------------------------
+    def _unstarted_map_tasks(self, job: JobRuntime) -> List[int]:
+        done = job.completed_map
+        running = job.running_map
+        return [i for i in range(job.spec.u_m)
+                if i not in done and i not in running]
+
+    def _unstarted_reduce_tasks(self, job: JobRuntime) -> List[int]:
+        done = job.completed_reduce
+        running = job.running_reduce
+        return [i for i in range(job.spec.v_r)
+                if i not in done and i not in running]
+
+    def _local_map_candidates(self, job: JobRuntime, node: int) -> List[int]:
+        return [i for i in self._unstarted_map_tasks(job)
+                if node in job.spec.block_placement[i]]
+
+    def active_jobs(self) -> List[JobRuntime]:
+        return [self.jobs[j] for j in self.order if not self.jobs[j].finished]
+
+    # subclasses implement:
+    def select(self, node: int, free_map: int, free_reduce: int,
+               now: float) -> List[Launch]:
+        raise NotImplementedError
+
+
+class CompletionTimeScheduler(SchedulerBase):
+    """The paper's proposed scheduler (Algorithm 2 + Algorithm 1)."""
+
+    name = "proposed"
+    uses_reconfig = True
+
+    def __init__(self, spec: ClusterSpec, reconfig: Optional[Reconfigurator] = None,
+                 estimator: Optional[OnlineEstimator] = None):
+        super().__init__(spec)
+        self.reconfig = reconfig or Reconfigurator(spec)
+        self.estimator = estimator or OnlineEstimator()
+        self.parked: Set[TaskId] = set()
+        # tasks whose reconfiguration wait expired once run remotely instead
+        # of re-parking (bounds per-task wait at max_wait)
+        self.no_park: Set[TaskId] = set()
+        # max parked tasks per target machine's AQ
+        self.park_depth = 2
+        self.max_slots = spec.num_nodes * spec.base_map_slots
+
+    # -- Algorithm 2 line 2 + lines 17-20 ----------------------------------
+    def on_job_added(self, job: JobRuntime, now: float) -> None:
+        self._recompute_demand(job, now)
+
+    def on_task_finished(self, job: JobRuntime, task: TaskId, now: float) -> None:
+        self._recompute_demand(job, now)
+
+    def _recompute_demand(self, job: JobRuntime, now: float) -> None:
+        job.demand = self.estimator.demand(
+            job, now, max_map_slots=self.max_slots,
+            max_reduce_slots=self.max_slots)
+
+    # -- scheduled counts include parked tasks ------------------------------
+    def _scheduled_maps(self, job: JobRuntime) -> int:
+        parked = sum(1 for t in self.parked if t.job_id == job.spec.job_id
+                     and t.kind == TaskKind.MAP)
+        return len(job.running_map) + parked
+
+    # -- Algorithm 2 main loop ----------------------------------------------
+    def select(self, node: int, free_map: int, free_reduce: int,
+               now: float) -> List[Launch]:
+        out: List[Launch] = []
+        jobs = self.active_jobs()
+        # bootstrap jobs first (no completed or running tasks), oldest first;
+        # then EDF ascending absolute deadline
+        bootstrap = [j for j in jobs if not j.started]
+        edf = sorted((j for j in jobs if j.started),
+                     key=lambda j: j.absolute_deadline)
+        for phase in ("demand", "backfill", "remote_fill"):
+            # Pass 1 "demand": Eq.-10 minimum demands, bootstrap jobs first
+            #   (probe tasks), then EDF (Algorithm 2).  Non-local map
+            #   candidates are parked for reconfiguration (Algorithm 1).
+            # Pass 2 "backfill": work-conserving — the abstract's "maximize
+            #   the use of resources among the active jobs": leftover slots
+            #   go to jobs beyond their minimum in EDF order, still parking
+            #   non-local candidates.
+            # Pass 3 "remote_fill": any core still idle takes a remote task
+            #   (last resort — patient parking must never idle the cluster).
+            if phase == "demand":
+                ordered = bootstrap + edf
+            else:
+                ordered = sorted(jobs, key=lambda j: j.absolute_deadline)
+            if phase == "remote_fill":
+                # Before burning idle cores on *remote* tasks, donate them to
+                # parked *local* tasks waiting on this machine's AQ — a local
+                # task on the sibling VM is strictly faster than a remote one
+                # here (this is what makes Algorithm 1 pay off: the donor
+                # core must not be re-occupied by remote work).
+                m = self.spec.machine_of(node)
+                pending = sum(1 for p in self.reconfig.aq[m]
+                              if p.target_vm != node)
+                while (free_map > 0 and pending > 0
+                       and self.reconfig.vcpus[node] > self.spec.min_vcpus_per_vm):
+                    self.reconfig.release_core(node, now)
+                    free_map -= 1
+                    pending -= 1
+            for job in ordered:
+                if free_map <= 0 and free_reduce <= 0:
+                    break
+                demand = job.demand
+                n_m = demand.n_m if demand else 1   # bootstrap: one probe task
+                n_r = demand.n_r if demand else 1
+                if phase != "demand":
+                    n_m, n_r = job.spec.u_m, job.spec.v_r
+                if not job.map_finished:
+                    while free_map > 0 and self._scheduled_maps(job) < n_m:
+                        launch = self._assign_map(
+                            job, node, now, allow_park=(phase != "remote_fill"))
+                        if launch is None:
+                            break
+                        if launch.via_reconfig:
+                            # task parked on AQ; node's core is only *offered*
+                            # (RQ) — it keeps serving until the match actually
+                            # unplugs it, so the slot stays schedulable now
+                            pass
+                        else:
+                            out.append(launch)
+                            free_map -= 1
+                            job.running_map[launch.task.index] = launch.node
+                            if launch.local:
+                                job.local_map_launches += 1
+                            else:
+                                job.remote_map_launches += 1
+                elif not job.finished:
+                    unstarted = self._unstarted_reduce_tasks(job)
+                    while (free_reduce > 0 and unstarted
+                           and len(job.running_reduce) < n_r):
+                        idx = unstarted.pop(0)
+                        t = TaskId(job.spec.job_id, TaskKind.REDUCE, idx)
+                        out.append(Launch(t, node, local=True))
+                        job.running_reduce[idx] = node
+                        free_reduce -= 1
+        return out
+
+    # -- Algorithm 1 -----------------------------------------------------------
+    def _assign_map(self, job: JobRuntime, node: int, now: float,
+                    allow_park: bool = True) -> Optional[Launch]:
+        local = self._local_map_candidates(job, node)
+        if local:
+            idx = local[0]
+            return Launch(TaskId(job.spec.job_id, TaskKind.MAP, idx), node,
+                          local=True)
+        unstarted = [i for i in self._unstarted_map_tasks(job)
+                     if TaskId(job.spec.job_id, TaskKind.MAP, i) not in self.parked]
+        if not unstarted:
+            return None
+        idx = unstarted[0]
+        task = TaskId(job.spec.job_id, TaskKind.MAP, idx)
+        placement = job.spec.block_placement[idx]
+        slack = job.absolute_deadline - now
+        # Deadline-critical or once-expired tasks run remotely right away;
+        # everything else prefers parking (Algorithm 1), falling through to
+        # the remote-fill pass only when the AQ is saturated.
+        deadline_critical = slack <= 3.0 * self.reconfig.max_wait
+        if task in self.no_park or deadline_critical or not allow_park:
+            return Launch(task, node, local=False)
+        # S_rq: data nodes by RQ entries desc (a pre-offered donor core means
+        # wait ≈ hot-plug latency); else S_aq: data nodes by AQ entries asc.
+        s_rq = sorted(placement, key=lambda v: -self.reconfig.rq_len(v))
+        if self.reconfig.rq_len(s_rq[0]) > 0:
+            p = s_rq[0]
+        else:
+            p = min(placement, key=lambda v: self.reconfig.aq_len(v))
+            if len(self.reconfig.aq[self.spec.machine_of(p)]) >= self.park_depth:
+                return None      # AQ saturated: leave for remote-fill / later
+        self.reconfig.park_task(task, p, now)   # AQ of machine(p)
+        self.reconfig.release_core(node, now)   # RQ of machine(node)
+        self.parked.add(task)
+        return Launch(task, p, local=True, via_reconfig=True)
+
+    def has_local_pending(self, vm: int) -> bool:
+        """Does any active job still have an unstarted map task whose data
+        lives on ``vm``?  (Used for the release-on-finish decision.)"""
+        for job in self.active_jobs():
+            if job.map_finished:
+                continue
+            for i in self._unstarted_map_tasks(job):
+                if vm in job.spec.block_placement[i]:
+                    return True
+        return False
+
+    # -- callbacks from the simulator for reconfig lifecycle -------------------
+    def parked_task_launched(self, task: TaskId, node: int, now: float) -> None:
+        self.parked.discard(task)
+        job = self.jobs[task.job_id]
+        job.running_map[task.index] = node
+        job.local_map_launches += 1
+        job.reconfig_map_launches += 1
+
+    def parked_task_expired(self, task: TaskId, now: float) -> None:
+        self.parked.discard(task)
+        self.no_park.add(task)

@@ -1,0 +1,191 @@
+"""Core datatypes for the deadline/locality scheduler.
+
+These types model the paper's world (MapReduce jobs, map/reduce tasks, slots,
+HDFS-style block placement) in a backend-agnostic way: the same types drive
+
+* the faithful discrete-event reproduction (`repro.simcluster`),
+* the real JAX MapReduce engine (`repro.mapreduce`), and
+* the fleet-level elastic TPU scheduler (`repro.elastic`), where a "map task"
+  is a data-parallel microbatch and a "slot" is a chip.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+
+class TaskKind(enum.Enum):
+    MAP = "map"
+    REDUCE = "reduce"
+
+
+class TaskState(enum.Enum):
+    UNSTARTED = "unstarted"   # U^j in the paper
+    RUNNING = "running"       # R^j
+    COMPLETED = "completed"   # C^j
+
+
+@dataclass(frozen=True)
+class TaskId:
+    job_id: str
+    kind: TaskKind
+    index: int
+
+    def __str__(self) -> str:  # pragma: no cover - debug aid
+        return f"{self.job_id}/{self.kind.value}{self.index}"
+
+
+@dataclass
+class WorkloadProfile:
+    """Nominal execution characteristics of one MapReduce workload.
+
+    The scheduler never reads these directly -- it estimates durations online
+    from completed tasks (paper Eq. 1).  The *simulator* uses them as ground
+    truth, optionally perturbed per-task.
+
+    Attributes:
+      name: workload name (wordcount, sort, grep, permutation, inverted_index).
+      map_time: nominal seconds for one map task on a *data-local* node.
+      reduce_time: nominal seconds for one reduce task (compute portion).
+      shuffle_time_per_pair: ``t_s`` -- seconds for one mapper->reducer copy.
+      remote_penalty: fractional slowdown of a map task reading its input
+        block from a remote node (e.g. 0.45 => 45% slower).
+      intermediate_ratio: bytes(intermediate)/bytes(input); drives the
+        "reduce-input heavy" behaviour of Permutation Generator.
+      time_cv: coefficient of variation for per-task duration jitter.
+    """
+
+    name: str
+    map_time: float
+    reduce_time: float
+    shuffle_time_per_pair: float
+    remote_penalty: float = 0.45
+    intermediate_ratio: float = 1.0
+    time_cv: float = 0.08
+
+
+@dataclass
+class JobSpec:
+    """A MapReduce job with a completion-time goal.
+
+    ``u_m`` / ``v_r`` follow the paper's symbols (number of map / reduce
+    tasks).  ``block_placement[i]`` lists the node ids that hold a replica of
+    map task *i*'s input block.
+    """
+
+    job_id: str
+    profile: WorkloadProfile
+    u_m: int
+    v_r: int
+    deadline: float                      # D, seconds from submission
+    submit_time: float = 0.0
+    input_size_gb: float = 0.0
+    block_placement: List[Tuple[int, ...]] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if self.u_m <= 0 or self.v_r <= 0:
+            raise ValueError("jobs need at least one map and one reduce task")
+        if self.deadline <= 0:
+            raise ValueError("deadline must be positive")
+
+
+@dataclass
+class SlotDemand:
+    """Output of the resource estimator: Eq. (10) of the paper."""
+
+    n_m: int      # minimum map slots
+    n_r: int      # minimum reduce slots
+    feasible: bool
+    # Raw (continuous) Lagrange solution, for analysis / tests.
+    n_m_cont: float = float("nan")
+    n_r_cont: float = float("nan")
+
+
+@dataclass
+class JobRuntime:
+    """Mutable execution state of a job as seen by a scheduler.
+
+    Tracks the paper's sets C^j (completed), R^j (running), U^j (unstarted)
+    per phase, plus the observed durations that feed Eq. (1).
+    """
+
+    spec: JobSpec
+    completed_map: Set[int] = field(default_factory=set)
+    running_map: Dict[int, int] = field(default_factory=dict)      # task -> node
+    completed_reduce: Set[int] = field(default_factory=set)
+    running_reduce: Dict[int, int] = field(default_factory=dict)
+    map_durations: List[float] = field(default_factory=list)
+    reduce_durations: List[float] = field(default_factory=list)
+    demand: Optional[SlotDemand] = None
+    finish_time: Optional[float] = None
+    local_map_launches: int = 0
+    remote_map_launches: int = 0
+    reconfig_map_launches: int = 0     # launched data-local via Algorithm 1
+
+    # -- paper-set views -------------------------------------------------
+    @property
+    def unstarted_map(self) -> int:
+        return self.spec.u_m - len(self.completed_map) - len(self.running_map)
+
+    @property
+    def unstarted_reduce(self) -> int:
+        return self.spec.v_r - len(self.completed_reduce) - len(self.running_reduce)
+
+    @property
+    def map_finished(self) -> bool:
+        return len(self.completed_map) == self.spec.u_m
+
+    @property
+    def finished(self) -> bool:
+        return self.map_finished and len(self.completed_reduce) == self.spec.v_r
+
+    @property
+    def started(self) -> bool:
+        """Paper Algorithm 2: jobs with no completed or running tasks get
+        precedence so the estimator can bootstrap."""
+        return bool(
+            self.completed_map
+            or self.running_map
+            or self.completed_reduce
+            or self.running_reduce
+        )
+
+    @property
+    def absolute_deadline(self) -> float:
+        return self.spec.submit_time + self.spec.deadline
+
+    def locality_rate(self) -> float:
+        launches = self.local_map_launches + self.remote_map_launches
+        return self.local_map_launches / launches if launches else 0.0
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """Static shape of the virtualized cluster (paper §5: 20 machines,
+    2 map + 2 reduce slots per node)."""
+
+    num_machines: int = 20
+    vms_per_machine: int = 2
+    base_map_slots: int = 2        # per VM
+    base_reduce_slots: int = 2     # per VM
+    max_vcpus_per_vm: int = 6      # hot-plug ceiling
+    min_vcpus_per_vm: int = 1      # never unplug below this
+    replication: int = 3           # HDFS default
+    heartbeat_interval: float = 3.0   # paper: "Usually the heartbeat interval is 3s"
+    hotplug_latency: float = 0.5      # seconds for a vCPU assign/release
+
+    @property
+    def num_nodes(self) -> int:
+        return self.num_machines * self.vms_per_machine
+
+    def machine_of(self, node: int) -> int:
+        return node // self.vms_per_machine
+
+
+def ceil_at_least_one(x: float) -> int:
+    """Ceil to int, but always demand at least one slot."""
+    if not math.isfinite(x) or x <= 0:
+        return 1
+    return max(1, int(math.ceil(x - 1e-9)))

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, ShardedDataset, make_batch_iter,
+                                 host_shard_assignment)

@@ -1,0 +1,2 @@
+from repro.elastic.fleet import (FleetJob, FleetScheduler, ChipPool,
+                                 EstimatorBridge)

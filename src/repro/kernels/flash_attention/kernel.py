@@ -1,0 +1,135 @@
+"""Flash attention forward as a Pallas TPU kernel.
+
+TPU adaptation (vs. the CUDA original): the online-softmax tiling is mapped
+to MXU-friendly (q_block × kv_block) tiles resident in VMEM; the kv loop is
+the innermost grid dimension so K/V tiles stream HBM->VMEM while the
+accumulator stays pinned in a VMEM scratch across iterations (grid order
+(b, h, q, kv) with kv minor = sequential on TPU, enabling carry).
+
+Block shapes default to (128, 128): MXU-aligned (multiples of 128 on both
+matmul dims) and small enough that q/k/v/acc tiles fit VMEM for head_dim
+up to 256.
+
+Causal skipping is handled by masking inside the tile; whole-tile skipping
+uses `when` on the tile index so fully-masked tiles do no MXU work.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_Q_BLOCK = 128
+DEFAULT_KV_BLOCK = 128
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               causal: bool, window: Optional[int], q_block: int,
+               kv_block: int, n_kv: int, sq: int, skv: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * q_block
+    k_start = ki * kv_block
+    # whole-tile skip: tile contributes only if some (q, k) pair can be
+    # unmasked — fully-masked tiles do no MXU work
+    run = jnp.bool_(True)
+    if causal:
+        run &= (q_start + q_block - 1) >= k_start
+    if window is not None:
+        run &= q_start < k_start + kv_block + window - 1
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32)           # [qb, D]
+        k = k_ref[0, 0].astype(jnp.float32)           # [kb, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [qb, kb]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+        mask = (qpos < sq) & (kpos < skv)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0, :, :] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,            # [B, H, Sq, D]  (GQA pre-broadcast to H = Hq)
+    k: jax.Array,            # [B, H, Skv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_block: int = DEFAULT_Q_BLOCK,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    qb, kb = min(q_block, max(Sq, 8)), min(kv_block, max(Skv, 8))
+    pad_q = (-Sq) % qb
+    pad_k = (-Skv) % kb
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    n_q = q.shape[2] // qb
+    n_kv = k.shape[2] // kb
+    grid = (B, H, n_q, n_kv)
+
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, window=window, q_block=qb, kv_block=kb,
+        n_kv=n_kv, sq=Sq, skv=Skv, scale=1.0 / math.sqrt(D))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, kb, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, kb, D), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, n_q * qb, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, D), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

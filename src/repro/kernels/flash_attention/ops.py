@@ -1,0 +1,36 @@
+"""Jit'd public wrapper for the flash-attention kernel (GQA-aware)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_block", "kv_block",
+                                   "interpret"))
+def flash_attention(
+    q: jax.Array,            # [B, Hq, Sq, D]
+    k: jax.Array,            # [B, Hkv, Skv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """GQA flash attention: broadcasts KV heads to query heads, then runs
+    the Pallas kernel.  On CPU use interpret=True (validation mode)."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window,
+        q_block=q_block, kv_block=kv_block, interpret=interpret)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention Pallas kernel.
+
+Naive full-materialization attention — the ground truth every kernel shape
+sweep asserts against (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,            # [B, Hq, Sq, D]
+    k: jax.Array,            # [B, Hkv, Skv, D]
+    v: jax.Array,            # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    logits *= 1.0 / math.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)

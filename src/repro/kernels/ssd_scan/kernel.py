@@ -1,0 +1,115 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060 §6): one grid step
+processes one (batch, head-block, chunk) tile entirely in VMEM —
+
+  1. intra-chunk dual form:   Y_diag = (C B^T ∘ L) · (dt x)      (MXU)
+  2. inter-chunk state carry: h held in a VMEM scratch across the chunk
+     grid dimension (sequential on TPU), updated as
+       Y_off = C · h · exp(cumsum dA);  h = h · exp(total dA) + states
+
+The chunk length is the VMEM tile: Q=128 rows align the MXU; state [P, N]
+per head stays resident.  Grid = (B, H, n_chunks) with chunks minor so the
+scratch carry is legal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int, seq_len: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # [Q]
+    a = a_ref[0]                                     # scalar A_h
+    b = b_ref[0, :, 0].astype(jnp.float32)          # [Q, N]
+    c = c_ref[0, :, 0].astype(jnp.float32)          # [Q, N]
+
+    # mask padded tail rows (dt=0 -> no state contribution)
+    pos = ci * chunk + jax.lax.iota(jnp.int32, chunk)
+    dt = jnp.where(pos < seq_len, dt, 0.0)
+
+    dA = dt * a                                      # [Q]
+    cum = jnp.cumsum(dA)                             # [Q]
+    # L[i, j] = exp(cum_i - cum_j) for i >= j else 0
+    li = cum[:, None] - cum[None, :]
+    tril = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tril, jnp.exp(li), 0.0)
+
+    xdt = x * dt[:, None]                            # [Q, P]
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    y_diag = jax.lax.dot_general(cb * L, xdt, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q, P]
+
+    h = h_ref[...]                                    # [P, N]
+    y_off = jax.lax.dot_general(c, h, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [Q, P]
+    y_off = y_off * jnp.exp(cum)[:, None]
+    y_ref[0, :, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # chunk state: sum_j exp(cum_last - cum_j) * dt_j * B_j (x) x_j
+    decay_to_end = jnp.exp(cum[-1] - cum)             # [Q]
+    bw = b * decay_to_end[:, None]                    # [Q, N]
+    states = jax.lax.dot_general(xdt, bw, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [P, N]
+    h_ref[...] = h * jnp.exp(cum[-1]) + states
+
+
+def ssd_scan(
+    x: jax.Array,      # [B, S, H, P]
+    dt: jax.Array,     # [B, S, H]
+    A: jax.Array,      # [H]
+    B_: jax.Array,     # [B, S, G, N]
+    C: jax.Array,      # [B, S, G, N]
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+):
+    """Returns y [B, S, H, P].  Groups are pre-broadcast to heads."""
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    if G != H:
+        B_ = jnp.repeat(B_, H // G, axis=2)
+        C = jnp.repeat(C, H // G, axis=2)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+    grid = (Bsz, H, nc)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, seq_len=S)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, Sp, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), B_, C)
+    return y[:, :S]

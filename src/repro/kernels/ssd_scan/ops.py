@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for the SSD-scan kernel (adds the D skip-term)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B_, C, D=None, *, chunk: int = 128, interpret: bool = False):
+    y = ssd_scan(x, dt, A, B_, C, chunk=chunk, interpret=interpret)
+    if D is not None:
+        y = y + (x.astype(jnp.float32)
+                 * D.astype(jnp.float32)[None, None, :, None]).astype(y.dtype)
+    return y

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunked-scan kernel.
+
+Sequential recurrence — O(S) scan, numerically exact ground truth:
+    h_t = h_{t-1} * exp(dt_t * A) + dt_t * B_t (x) x_t
+    y_t = C_t . h_t + D * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jax.Array,      # [B, S, H, P]
+    dt: jax.Array,     # [B, S, H]      (> 0, post-softplus)
+    A: jax.Array,      # [H]            (negative)
+    B_: jax.Array,     # [B, S, G, N]
+    C: jax.Array,      # [B, S, G, N]
+    D: jax.Array | None = None,        # [H]
+):
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(B_.astype(f32), rep, axis=2)     # [B,S,H,N]
+    Ch = jnp.repeat(C.astype(f32), rep, axis=2)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                         # [B,H,P],[B,H],[B,H,N]x2
+        decay = jnp.exp(dtt * A.astype(f32)[None])    # [B,H]
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt, bt, dtt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), f32)
+    xs = (x.astype(f32).transpose(1, 0, 2, 3), dt.astype(f32).transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3)                      # [B,S,H,P]
+    if D is not None:
+        y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), hT

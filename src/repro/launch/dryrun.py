@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+DOC = """Multi-pod dry-run: lower + compile every (architecture × input-shape × mesh)
+cell against the production mesh, with 512 placeholder CPU devices standing in
+for the 2×256-chip TPU v5e pods.
+
+For each cell we record:
+  * compile wall time, per-device memory analysis (proves it fits),
+  * cost_analysis (raw XLA numbers; NOTE: while-bodies counted once),
+  * trip-scaled dot FLOPs + collective wire bytes from the HLO parser
+    (repro.analysis.hlo) — these feed EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/results
+Hillclimb knobs: --no-fsdp --remat=none|dots|full --attn=chunked|chunked_packed
+                 --grad-accum N --fsdp-pod --tag label
+"""
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis.hlo import analyze_hlo
+from repro.configs import ALL_ARCHS, get_config
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_train_step, make_prefill_step, make_decode_step
+from repro.optim import AdamWConfig, adamw_init
+from repro.parallel.activations import set_activation_sharding
+from repro.parallel.sharding import (
+    ShardingPolicy, attach, make_batch_specs, make_cache_specs,
+    make_opt_specs, make_param_specs)
+
+
+def build_policy(multi_pod: bool, fsdp: bool, fsdp_pod: bool) -> ShardingPolicy:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    fa = (("pod", "data") if (fsdp_pod and multi_pod) else ("data",))
+    return ShardingPolicy(fsdp=fsdp, fsdp_axes=fa, dp_axes=dp)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               fsdp: bool = True, fsdp_pod: bool = False,
+               remat: str | None = None, attn: str | None = None,
+               grad_accum: int | None = None, save_hlo: Path | None = None,
+               extra_cfg: dict | None = None) -> dict:
+    """Lower + compile one cell; return the result record."""
+    t0 = time.time()
+    cfg = get_config(arch)
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    if attn:
+        cfg = cfg.replace(attn_impl=attn)
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    kind, seq, batch = S.SHAPES[shape_name]
+    ok, reason = S.cell_applicable(arch, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "kind": kind,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "fsdp": fsdp, "remat": cfg.remat, "attn": cfg.attn_impl}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pol = build_policy(multi_pod, fsdp, fsdp_pod)
+    dp_size = 1
+    for a in pol.dp_axes:
+        dp_size *= mesh.shape[a]
+    set_activation_sharding(dp=pol.dp_entry(), dp_size=dp_size,
+                            tp=pol.tp_axis, tp_size=mesh.shape[pol.tp_axis],
+                            mesh=mesh, fsdp=pol.fsdp_entry())
+
+    pshapes = S.params_shapes(cfg)
+    pspecs = make_param_specs(cfg, pshapes, mesh, pol)
+    p_in = attach(mesh, pshapes, pspecs)
+
+    bshapes = S.batch_specs(cfg, shape_name)
+    bspecs = make_batch_specs(cfg, bshapes, mesh, pol)
+    b_in = attach(mesh, bshapes, bspecs)
+
+    if kind == "train":
+        ga = grad_accum if grad_accum is not None else S.default_grad_accum(cfg, shape_name)
+        rec["grad_accum"] = ga
+        step = make_train_step(cfg, AdamWConfig(), grad_accum=ga,
+                               dp_entry=pol.dp_entry(), grad_specs=pspecs)
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        ospecs = make_opt_specs(pspecs)
+        o_in = attach(mesh, oshapes, ospecs)
+        args = (p_in, o_in, b_in)
+        jfn = jax.jit(step, donate_argnums=(0, 1))
+    elif kind == "prefill":
+        step = make_prefill_step(cfg)
+        args = (p_in, b_in)
+        jfn = jax.jit(step)
+    else:
+        step = make_decode_step(cfg)
+        cshapes = S.cache_specs(cfg, shape_name)
+        cspecs = make_cache_specs(cfg, cshapes, mesh, pol)
+        c_in = attach(mesh, cshapes, cspecs)
+        args = (p_in, c_in, b_in)
+        jfn = jax.jit(step, donate_argnums=(1,))
+
+    try:
+        with mesh:
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo_text = compiled.as_text()
+        hs = analyze_hlo(hlo_text)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory={k: int(getattr(ma, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes") if hasattr(ma, k)},
+            cost={k: float(v) for k, v in ca.items()
+                  if k in ("flops", "bytes accessed", "transcendentals")},
+            hlo=hs.to_json(),
+        )
+        if save_hlo is not None:
+            save_hlo.parent.mkdir(parents=True, exist_ok=True)
+            with gzip.open(save_hlo, "wt") as f:
+                f.write(hlo_text)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep the matrix going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--fsdp-pod", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--attn", default=None)
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--cfg", default=None, help="extra cfg overrides k=v,k=v")
+    args = ap.parse_args()
+
+    extra = {}
+    if args.cfg:
+        for kv in args.cfg.split(","):
+            k, v = kv.split("=")
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+            extra[k] = v
+
+    archs = ALL_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(S.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    outfile = outdir / f"dryrun_{args.tag}.jsonl"
+    done = set()
+    if outfile.exists():
+        for line in outfile.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                done.add((r["arch"], r["shape"], r["mesh"]))
+            except Exception:
+                pass
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch, shape, mesh_name) in done:
+                    continue
+                print(f"[dryrun] {arch} x {shape} x {mesh_name} ...", flush=True)
+                hlo_path = (outdir / "hlo" / f"{args.tag}_{arch}_{shape}_{mesh_name}.txt.gz"
+                            if args.save_hlo else None)
+                rec = lower_cell(
+                    arch, shape, multi_pod=mp, fsdp=not args.no_fsdp,
+                    fsdp_pod=args.fsdp_pod, remat=args.remat, attn=args.attn,
+                    grad_accum=args.grad_accum, save_hlo=hlo_path,
+                    extra_cfg=extra or None)
+                rec["tag"] = args.tag
+                with open(outfile, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                status = rec.get("status")
+                extra_info = (f" compile={rec.get('compile_s')}s"
+                              f" temp={rec.get('memory', {}).get('temp_size_in_bytes', 0)/2**30:.2f}GiB"
+                              if status == "ok" else rec.get("error", rec.get("reason", "")))
+                print(f"[dryrun]   -> {status}{extra_info}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

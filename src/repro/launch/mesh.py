@@ -1,0 +1,22 @@
+"""Production mesh builders.
+
+Functions, not module-level constants, so importing never touches jax device
+state.  The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+*before* any jax import; smoke tests and benches see the single real device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips ("data","model").
+    Two pods: 2x16x16 = 512 chips ("pod","data","model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for unit tests on the real device set."""
+    return jax.make_mesh((data, model), ("data", "model"))

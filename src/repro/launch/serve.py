@@ -1,0 +1,96 @@
+"""Serving launcher: batched prefill + KV-cache decode for any architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models.common import get_model
+
+
+def pad_cache_to(cache, max_len: int, seq_keys=("k", "v", "attn_k", "attn_v",
+                                                "c_kv", "k_rope")):
+    """Grow the seq dim of a prefill cache so decode can append."""
+    def walk(tree):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            elif k in seq_keys and hasattr(v, "ndim") and v.ndim >= 3:
+                seq_ax = v.ndim - 2
+                pad = max_len - v.shape[seq_ax]
+                if pad > 0:
+                    pads = [(0, 0)] * v.ndim
+                    pads[seq_ax] = (0, pad)
+                    v = jnp.pad(v, pads)
+                out[k] = v
+            else:
+                out[k] = v
+        return out
+    return walk(cache)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ALL_ARCHS)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.preset == "smoke"
+           else get_config(args.arch))
+    if cfg.family == "encdec":
+        raise SystemExit("whisper serving needs audio frontend inputs; "
+                         "see tests/test_models_smoke.py for the API")
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    logits, cache = prefill(params, {"tokens": prompts})
+    cache = pad_cache_to(cache, args.prompt_len + args.gen)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    key = jax.random.PRNGKey(2)
+
+    def sample(logits, key):
+        if args.temperature <= 0:
+            return jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return jax.random.categorical(key, logits[:, -1] / args.temperature
+                                      )[:, None]
+
+    tok = sample(logits, key)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = decode(params, cache, {"tokens": tok})
+        tok = sample(logits, sub)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"[serve] {args.arch}: prefill {args.batch}x{args.prompt_len} in "
+          f"{t_prefill*1e3:.0f} ms; decode {args.gen-1} steps in "
+          f"{t_decode*1e3:.0f} ms ({args.batch*(args.gen-1)/t_decode:.0f} tok/s)")
+    print("[serve] sample:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

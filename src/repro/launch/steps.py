@@ -1,0 +1,88 @@
+"""Step builders: train / prefill / decode, shared by the launcher, the
+dry-run and the examples.
+
+``train_step`` does gradient accumulation over ``grad_accum`` microbatches —
+the framework analogue of the paper's map tasks (each microbatch is one "map
+task"; the gradient reduce-scatter + optimizer update is the "reduce" phase;
+see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, get_model
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1, dp_entry=None, grad_specs=None):
+    model = get_model(cfg)
+
+    def loss_fn(params, mb):
+        loss, _ = model.loss(cfg, params, mb)
+        return loss
+
+    def constrain_grads(g):
+        # keep per-µb grads in the params' sharding so GSPMD emits
+        # reduce-scatters instead of all-reduce + slice (§Perf iteration)
+        if grad_specs is None:
+            return g
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, g, grad_specs)
+
+    def train_step(params, opt_state, batch):
+        M = grad_accum
+        if M <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+            grads = constrain_grads(grads)
+        else:
+            def resh(x):
+                y = x.reshape((M, x.shape[0] // M) + x.shape[1:])
+                if dp_entry is not None:
+                    spec = jax.sharding.PartitionSpec(
+                        None, dp_entry, *([None] * (y.ndim - 2)))
+                    y = jax.lax.with_sharding_constraint(y, spec)
+                return y
+            mbs = jax.tree_util.tree_map(resh, batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g = constrain_grads(g)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zeros, jnp.float32(0)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / M, gsum)
+            loss = lsum / M
+
+        new_params, new_opt = adamw_update(opt_cfg, params, grads, opt_state)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    model = get_model(cfg)
+
+    def decode_step(params, cache, batch):
+        return model.decode_step(cfg, params, cache, batch)
+
+    return decode_step

@@ -1,0 +1,117 @@
+"""Training launcher: any assigned architecture on the local device set.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --preset smoke --steps 50 --deadline 1800
+
+On a real pod this binary runs once per host (jax.distributed); here it
+drives whatever jax.devices() exposes.  The deadline flows into the paper's
+Eq.-10 estimator, which logs the minimum chip allocation for the completion
+goal as training progresses (the fleet controller consumes the same signal,
+see repro.elastic).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.data import DataConfig, ShardedDataset, make_batch_iter
+from repro.elastic.fleet import EstimatorBridge
+from repro.launch.steps import make_train_step
+from repro.models.common import get_model
+from repro.optim import AdamWConfig, adamw_init
+from repro.parallel.activations import set_activation_sharding
+from repro.parallel.sharding import (ShardingPolicy, make_opt_specs,
+                                     make_param_specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ALL_ARCHS)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--deadline", type=float, default=3600.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data-axis", type=int, default=0,
+                    help="data-parallel size (0 = all devices)")
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.preset == "smoke"
+           else get_config(args.arch))
+    if cfg.family == "encdec":
+        raise SystemExit("use a seq2seq driver for whisper (see examples)")
+    model = get_model(cfg)
+
+    ndev = len(jax.devices())
+    dp = args.data_axis or ndev
+    mesh = Mesh(np.array(jax.devices()[:dp]).reshape(dp, 1), ("data", "model"))
+    pol = ShardingPolicy(fsdp=dp > 1)
+    set_activation_sharding(dp="data", dp_size=dp, tp="model", tp_size=1,
+                            mesh=mesh, fsdp=pol.fsdp_entry())
+
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    pshapes = jax.eval_shape(lambda p: p, params)
+    pspecs = make_param_specs(cfg, pshapes, mesh, pol)
+    params = jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, pspecs)
+    opt = adamw_init(params)
+    n = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+    print(f"[train] {args.arch} ({n/1e6:.1f}M params) on {dp} device(s)")
+
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, num_shards=64)
+    ds = ShardedDataset(data, num_hosts=max(dp // 4, 1))
+    batches = make_batch_iter(ds, hosts=list(range(max(dp // 4, 1))))
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                          total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, grad_accum=args.grad_accum,
+                                      dp_entry="data", grad_specs=pspecs))
+
+    ck = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start = (latest_step(args.ckpt_dir) or 0) if args.ckpt_dir else 0
+    if start:
+        state = restore_checkpoint(args.ckpt_dir, start,
+                                   {"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        print(f"[train] restored step {start}")
+
+    t_run = time.time()
+    times = []
+    with mesh:
+        for i in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+            t0 = time.time()
+            params, opt, metrics = step_fn(params, opt, batch)
+            jax.block_until_ready(metrics["loss"])
+            times.append(time.time() - t0)
+            if i % 10 == 0 or i == args.steps - 1:
+                t_step = sum(times[-10:]) / len(times[-10:])
+                chips = EstimatorBridge.demand(
+                    max(args.steps - i - 1, 1), t_step, dp,
+                    args.deadline - (time.time() - t_run), total_chips=256)
+                print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
+                      f"({t_step*1e3:.0f} ms/step, Eq.10 min-chips={chips})")
+            if ck and i and i % args.ckpt_every == 0:
+                ck.save(i, {"params": params, "opt": opt})
+    if ck:
+        ck.save(args.steps, {"params": params, "opt": opt})
+        ck.wait()
+    toks = (args.steps - start) * args.batch * args.seq
+    print(f"[train] done: {toks/(time.time()-t_run):.0f} tok/s, "
+          f"data locality {ds.locality_rate():.0%}")
+
+
+if __name__ == "__main__":
+    main()

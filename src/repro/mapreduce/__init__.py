@@ -1,0 +1,1 @@
+from repro.mapreduce.engine import MRJob, run_mapreduce, WORKLOAD_FNS

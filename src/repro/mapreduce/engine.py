@@ -1,0 +1,117 @@
+"""A real (executable) MapReduce engine in JAX — the data plane behind the
+simulated control plane.
+
+The paper's five workloads are implemented as jitted map/reduce functions
+over token blocks.  The engine mirrors Hadoop's phases:
+
+  map:     vmap(map_fn) over input blocks -> per-block partial results,
+           hash-partitioned into ``n_reducers`` buckets
+  shuffle: transpose [blocks, reducers, ...] -> [reducers, blocks, ...]
+           (on a sharded mesh this lowers to an all-to-all; the dry-run of
+           the framework exercises that path)
+  reduce:  vmap(reduce_fn) over reducer buckets
+
+Each workload returns a verifiable aggregate so tests can assert engine
+correctness against a pure-numpy oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VOCAB = 4096
+
+
+@dataclass(frozen=True)
+class MRJob:
+    workload: str
+    n_blocks: int
+    block_tokens: int
+    n_reducers: int
+    seed: int = 0
+
+
+def make_blocks(job: MRJob) -> np.ndarray:
+    rng = np.random.RandomState(job.seed)
+    return rng.randint(1, VOCAB, size=(job.n_blocks, job.block_tokens),
+                       dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# map fns: block tokens [T] -> [n_reducers, payload] partials
+# ---------------------------------------------------------------------------
+
+
+def _bucket(tokens: jax.Array, n_red: int) -> jax.Array:
+    return tokens % n_red
+
+
+def map_wordcount(tokens: jax.Array, n_red: int) -> jax.Array:
+    """Per-reducer histogram slice: [n_red, VOCAB//n_red]."""
+    counts = jnp.bincount(tokens, length=VOCAB)
+    return counts.reshape(n_red, VOCAB // n_red)
+
+
+def map_grep(tokens: jax.Array, n_red: int, needle: int = 7) -> jax.Array:
+    hits = (tokens == needle).sum()
+    out = jnp.zeros((n_red, 1), jnp.int32)
+    return out.at[needle % n_red, 0].set(hits.astype(jnp.int32))
+
+
+def map_sort(tokens: jax.Array, n_red: int) -> jax.Array:
+    """Range-partition counts: sorted output = prefix sums per bucket."""
+    edges = jnp.arange(1, n_red + 1) * (VOCAB // n_red)
+    bucket = jnp.searchsorted(edges, tokens, side="right")
+    onehot = jax.nn.one_hot(bucket, n_red, dtype=jnp.int32)
+    # per-bucket local sorted histogram
+    counts = jnp.bincount(tokens, length=VOCAB).reshape(n_red, VOCAB // n_red)
+    del onehot
+    return counts
+
+
+def map_permutation(tokens: jax.Array, n_red: int) -> jax.Array:
+    """Reduce-input-heavy: emits an [n_red, VOCAB//n_red] dense expansion of
+    pairwise shifted tokens (large intermediate, like the paper's
+    permutation generator)."""
+    shifted = jnp.stack([jnp.roll(tokens, s) for s in range(4)], 0)
+    pairs = (tokens[None, :] * 31 + shifted) % VOCAB
+    counts = jnp.bincount(pairs.reshape(-1), length=VOCAB)
+    return counts.reshape(n_red, VOCAB // n_red)
+
+
+def map_inverted_index(tokens: jax.Array, n_red: int) -> jax.Array:
+    present = (jnp.bincount(tokens, length=VOCAB) > 0).astype(jnp.int32)
+    return present.reshape(n_red, VOCAB // n_red)
+
+
+# reduce fns: [n_blocks, payload] -> [payload]
+def reduce_sum(parts: jax.Array) -> jax.Array:
+    return parts.sum(axis=0)
+
+
+WORKLOAD_FNS: Dict[str, Tuple[Callable, Callable]] = {
+    "wordcount": (map_wordcount, reduce_sum),
+    "grep": (map_grep, reduce_sum),
+    "sort": (map_sort, reduce_sum),             # counting-sort histogram
+    "permutation": (map_permutation, reduce_sum),
+    "inverted_index": (map_inverted_index, reduce_sum),  # posting counts
+}
+
+
+@partial(jax.jit, static_argnames=("workload", "n_red"))
+def _run(blocks: jax.Array, workload: str, n_red: int):
+    map_fn, red_fn = WORKLOAD_FNS[workload]
+    partials = jax.vmap(lambda b: map_fn(b, n_red))(blocks)   # [B, R, P]
+    shuffled = jnp.swapaxes(partials, 0, 1)                   # [R, B, P] (all-to-all)
+    return jax.vmap(red_fn)(shuffled)                         # [R, P]
+
+
+def run_mapreduce(job: MRJob, blocks: np.ndarray | None = None) -> np.ndarray:
+    if blocks is None:
+        blocks = make_blocks(job)
+    return np.asarray(_run(jnp.asarray(blocks), job.workload, job.n_reducers))

@@ -1,0 +1,286 @@
+"""Flash-style chunked attention with a custom VJP (pure jnp / XLA path).
+
+Forward: online-softmax over KV blocks inside a q-block loop; residuals are
+ONLY (q, k, v, out, lse) — per-block probabilities are never materialized,
+which is what keeps long-context train/prefill within HBM (the naive scan
+saves an [nq, nk, B, H, qb, kb] probability stack for backward).
+
+Backward: one pass over q blocks (lax.scan); for each q block an inner scan
+over kv blocks recomputes s = qk^T and p = exp(s - lse), accumulating
+  dq(block)  = Σ_j dS_ij · k_j
+  dk_j      += dS_ij^T · q_i         (scatter into the carried dK buffer)
+  dv_j      += p_ij^T · dO_i
+This mirrors the Pallas kernel structure (repro.kernels.flash_attention);
+the kernel and this implementation validate against the same oracle.
+
+``causal_pack=True`` (beyond-paper §Perf optimization) pairs q block i with
+q block nq-1-i so the causal triangle is computed without ~2× masked waste;
+it applies to the forward pass (the backward always visits the full
+rectangle per q block when packing is off; with packing on, the backward
+inner loop spans only the causal range via the same pairing).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _mask_block(qpos, kpos, causal, window):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= qpos[:, None] - kpos[None, :] < window
+    m &= (qpos >= 0)[:, None]
+    m &= (kpos < jnp.iinfo(jnp.int32).max)[None, :]
+    return m
+
+
+def _prep(q, k, v, q_positions, kv_positions, q_block, kv_block):
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    pad_q = (-Sq) % qb
+    pad_k = (-Skv) % kb
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    qpos = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    kpos = jnp.pad(kv_positions, (0, pad_k),
+                   constant_values=jnp.iinfo(jnp.int32).max)
+    nq = qp.shape[2] // qb
+    nk = kp.shape[2] // kb
+    qp = qp.reshape(B, Hkv, G, nq, qb, D).transpose(3, 0, 1, 2, 4, 5)
+    kp = kp.reshape(B, Hkv, nk, kb, D).transpose(2, 0, 1, 3, 4)
+    vp = vp.reshape(B, Hkv, nk, kb, Dv).transpose(2, 0, 1, 3, 4)
+    return qp, kp, vp, qpos.reshape(nq, qb), kpos.reshape(nk, kb), (
+        B, Hq, Hkv, G, Sq, Skv, D, Dv, qb, kb, nq, nk)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_qblock(q_blk, qpos_blk, kp, vp, kpos_b, *, scale, causal, window,
+                kv_lo=None, kv_hi=None):
+    """Online softmax of one q block against all kv blocks.
+
+    Returns (out_unnormalized... actually normalized out, m, l)."""
+    B, Hkv, G, qb, D = q_blk.shape
+    Dv = vp.shape[-1]
+
+    def kv_step(carry, inp):
+        acc, m, l = carry
+        k_blk, v_blk, kpos_blk, kv_idx = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk.astype(jnp.float32),
+                       k_blk.astype(jnp.float32)) * scale
+        mask = _mask_block(qpos_blk, kpos_blk, causal, window)
+        if kv_lo is not None:
+            mask &= (kv_idx >= kv_lo) & (kv_idx < kv_hi)
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    nk = kp.shape[0]
+    init = (jnp.zeros((B, Hkv, G, qb, Dv), jnp.float32),
+            jnp.full((B, Hkv, G, qb), -jnp.inf, jnp.float32),
+            jnp.zeros((B, Hkv, G, qb), jnp.float32))
+    (acc, m, l), _ = jax.lax.scan(kv_step, init,
+                                  (kp, vp, kpos_b, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = jnp.where(jnp.isfinite(m), m + jnp.log(jnp.maximum(l, 1e-30)),
+                    -jnp.inf)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_positions, kv_positions, causal, window,
+               q_block, kv_block, causal_pack):
+    qp, kp, vp, qpos_b, kpos_b, dims = _prep(
+        q, k, v, q_positions, kv_positions, q_block, kv_block)
+    B, Hq, Hkv, G, Sq, Skv, D, Dv, qb, kb, nq, nk = dims
+    scale = 1.0 / math.sqrt(D)
+
+    if not (causal and causal_pack and nq == nk and nq > 1):
+        def per_q(args):
+            q_blk, qpos_blk = args
+            return _fwd_qblock(q_blk, qpos_blk, kp, vp, kpos_b, scale=scale,
+                               causal=causal, window=window)
+        out, lse = jax.lax.map(per_q, (qp, qpos_b))
+    else:
+        npairs = (nq + 1) // 2
+        idx_lo = jnp.arange(npairs)
+        idx_hi = nq - 1 - idx_lo
+
+        def per_pair(pair):
+            i_lo, i_hi = pair
+            q_lo, qpos_lo = qp[i_lo], qpos_b[i_lo]
+            q_hi, qpos_hi = qp[i_hi], qpos_b[i_hi]
+            zero = lambda: (
+                jnp.zeros((B, Hkv, G, qb, Dv), jnp.float32),
+                jnp.full((B, Hkv, G, qb), -jnp.inf, jnp.float32),
+                jnp.zeros((B, Hkv, G, qb), jnp.float32))
+
+            def step(carry, s_idx):
+                c_lo, c_hi = carry
+                serve_lo = s_idx <= i_lo
+                kv_idx = jnp.where(serve_lo, s_idx, s_idx - i_lo - 1)
+                kv_idx = jnp.clip(kv_idx, 0, nk - 1)
+                k_blk = jax.lax.dynamic_index_in_dim(kp, kv_idx, 0, False)
+                v_blk = jax.lax.dynamic_index_in_dim(vp, kv_idx, 0, False)
+                kpos_blk = jax.lax.dynamic_index_in_dim(kpos_b, kv_idx, 0, False)
+                q_blk = jnp.where(serve_lo, q_lo, q_hi)
+                qpos_blk = jnp.where(serve_lo, qpos_lo, qpos_hi)
+                acc, m, l = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(serve_lo, a, b), c_lo, c_hi)
+                s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk.astype(jnp.float32),
+                               k_blk.astype(jnp.float32)) * scale
+                mask = _mask_block(qpos_blk, kpos_blk, causal, window)
+                s = jnp.where(mask[None, None, None], s, _NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+                p = jnp.exp(s - m_safe[..., None])
+                p = jnp.where(mask[None, None, None], p, 0.0)
+                corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+                upd = (acc * corr[..., None] + jnp.einsum(
+                    "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32)),
+                    m_new, l * corr + jnp.sum(p, axis=-1))
+                c_lo = jax.tree_util.tree_map(
+                    lambda old, new: jnp.where(serve_lo, new, old), c_lo, upd)
+                c_hi = jax.tree_util.tree_map(
+                    lambda old, new: jnp.where(serve_lo, old, new), c_hi, upd)
+                return (c_lo, c_hi), None
+
+            (c_lo, c_hi), _ = jax.lax.scan(step, (zero(), zero()),
+                                           jnp.arange(nq + 1))
+            fin = lambda c: (
+                c[0] / jnp.maximum(c[2], 1e-30)[..., None],
+                jnp.where(jnp.isfinite(c[1]),
+                          c[1] + jnp.log(jnp.maximum(c[2], 1e-30)), -jnp.inf))
+            (o_lo, l_lo), (o_hi, l_hi) = fin(c_lo), fin(c_hi)
+            return o_lo, l_lo, o_hi, l_hi
+
+        o_lo, l_lo, o_hi, l_hi = jax.lax.map(per_pair, (idx_lo, idx_hi))
+        out = jnp.zeros((nq, B, Hkv, G, qb, Dv), jnp.float32)
+        lse = jnp.zeros((nq, B, Hkv, G, qb), jnp.float32)
+        out = out.at[idx_lo].set(o_lo).at[idx_hi].set(o_hi)
+        lse = lse.at[idx_lo].set(l_lo).at[idx_hi].set(l_hi)
+
+    # out: [nq, B, Hkv, G, qb, Dv] -> [B, Hq, Sq, Dv]
+    o = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv * G, nq * qb, Dv)
+    o = o[:, :, :Sq].astype(q.dtype)
+    lse_full = lse.transpose(1, 2, 3, 0, 4).reshape(B, Hkv * G, nq * qb)[:, :, :Sq]
+    return o, lse_full
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+
+def _flash_bwd_impl(q, k, v, out, lse, do, q_positions, kv_positions,
+                    causal, window, q_block, kv_block):
+    qp, kp, vp, qpos_b, kpos_b, dims = _prep(
+        q, k, v, q_positions, kv_positions, q_block, kv_block)
+    B, Hq, Hkv, G, Sq, Skv, D, Dv, qb, kb, nq, nk = dims
+    scale = 1.0 / math.sqrt(D)
+
+    pad_q = nq * qb - Sq
+    dop = jnp.pad(do, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    outp = jnp.pad(out, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    lsep = jnp.pad(lse, ((0, 0), (0, 0), (0, pad_q)), constant_values=0.0)
+    # delta = rowsum(dO * O)   [B, Hq, Sq]
+    delta = jnp.sum(dop.astype(jnp.float32) * outp.astype(jnp.float32), -1)
+    resh_q = lambda x, last: x.reshape(B, Hkv, G, nq, qb, last).transpose(
+        3, 0, 1, 2, 4, 5)
+    dop_b = resh_q(dop, Dv)
+    delta_b = delta.reshape(B, Hkv, G, nq, qb).transpose(3, 0, 1, 2, 4)
+    lse_b = lsep.reshape(B, Hkv, G, nq, qb).transpose(3, 0, 1, 2, 4)
+
+    dK0 = jnp.zeros((nk, B, Hkv, kb, D), jnp.float32)
+    dV0 = jnp.zeros((nk, B, Hkv, kb, Dv), jnp.float32)
+
+    def q_step(carry, inp):
+        dK, dV = carry
+        q_blk, qpos_blk, do_blk, dl_blk, lse_blk = inp
+
+        def kv_step(kcarry, kv_idx):
+            dK, dV, dq = kcarry
+            k_blk = jax.lax.dynamic_index_in_dim(kp, kv_idx, 0, False)
+            v_blk = jax.lax.dynamic_index_in_dim(vp, kv_idx, 0, False)
+            kpos_blk = jax.lax.dynamic_index_in_dim(kpos_b, kv_idx, 0, False)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            mask = _mask_block(qpos_blk, kpos_blk, causal, window)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lse_blk[..., None]), 0.0)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_blk.astype(jnp.float32),
+                            v_blk.astype(jnp.float32))
+            ds = p * (dp - dl_blk[..., None]) * scale
+            dq = dq + jnp.einsum("bhgqk,bhkd->bhgqd", ds,
+                                 k_blk.astype(jnp.float32))
+            dk_c = jnp.einsum("bhgqk,bhgqd->bhkd", ds, q_blk.astype(jnp.float32))
+            dv_c = jnp.einsum("bhgqk,bhgqd->bhkd", p, do_blk.astype(jnp.float32))
+            dK = dK.at[kv_idx].add(dk_c)
+            dV = dV.at[kv_idx].add(dv_c)
+            return (dK, dV, dq), None
+
+        dq0 = jnp.zeros((B, Hkv, G, qb, D), jnp.float32)
+        (dK, dV, dq), _ = jax.lax.scan(kv_step, (dK, dV, dq0), jnp.arange(nk))
+        return (dK, dV), dq
+
+    (dK, dV), dQ = jax.lax.scan(
+        q_step, (dK0, dV0), (qp, qpos_b, dop_b, delta_b, lse_b))
+
+    dq = dQ.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, nq * qb, D)[:, :, :Sq]
+    dk = dK.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, nk * kb, D)[:, :, :Skv]
+    dv = dV.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, nk * kb, Dv)[:, :, :Skv]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def flash_attention(q, k, v, q_positions, kv_positions,
+                    causal=True, window=None,
+                    q_block=1024, kv_block=1024, causal_pack=False):
+    out, _ = _flash_fwd(q, k, v, q_positions, kv_positions, causal, window,
+                        q_block, kv_block, causal_pack)
+    return out
+
+
+def _vjp_fwd(q, k, v, q_positions, kv_positions,
+             causal, window, q_block, kv_block, causal_pack):
+    out, lse = _flash_fwd(q, k, v, q_positions, kv_positions, causal, window,
+                          q_block, kv_block, causal_pack)
+    return out, (q, k, v, out, lse, q_positions, kv_positions)
+
+
+def _vjp_bwd(causal, window, q_block, kv_block, causal_pack, res, do):
+    q, k, v, out, lse, q_positions, kv_positions = res
+    dq, dk, dv = _flash_bwd_impl(q, k, v, out, lse, do, q_positions,
+                                 kv_positions, causal, window,
+                                 q_block, kv_block)
+    return dq, dk, dv, None, None
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,568 @@
+"""Shared neural-net layers (pure jnp, functional).
+
+Conventions
+-----------
+* Activations ``[batch, seq, d_model]`` (attention internally ``[B, H, S, D]``).
+* All matmuls run in ``cfg.compute_dtype`` (bf16); softmax / norms / losses
+  accumulate in fp32.
+* Attention has two implementations:
+    - ``dense``   : full [Sq, Skv] logits (fine for short seq / decode-step)
+    - ``chunked`` : online-softmax over KV blocks inside a q-block loop —
+      O(block²) live memory, used for long-context prefill/train.  With
+      ``causal_pack=True`` q-blocks are paired (i, nq-1-i) so causal skipping
+      wastes no FLOPs (the beyond-paper perf optimization; see EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.models.common import ModelConfig
+from repro.models.flash import flash_attention
+from repro.parallel.activations import (bh_flat_entry, shard_acts,
+                                        shard_attn_qkv, shard_bh,
+                                        shard_embed_out, shard_logits)
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(cfg: ModelConfig, d: int):
+    if cfg.norm == "rms":
+        return {"scale": jnp.ones((d,), cfg.param_dtype)}
+    return {"scale": jnp.ones((d,), cfg.param_dtype), "bias": jnp.zeros((d,), cfg.param_dtype)}
+
+
+def apply_norm(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    if cfg.norm == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE, partial RoPE, M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions: jax.Array, rot_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions [...]: angles for rot_dim//2 frequencies -> cos/sin [..., rot_dim//2]."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # [..., rot_dim//2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, fraction: float = 1.0) -> jax.Array:
+    """x: [B, H, S, D]; positions: [B, S].  Rotates the first ``fraction`` of D.
+
+    Uses the half-split convention (rotate_half), matching llama."""
+    D = x.shape[-1]
+    rot = int(D * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    cos, sin = _rope_angles(positions, rot, theta)          # [B, S, rot//2]
+    cos = cos[:, None, :, :]                                 # [B, 1, S, rot//2]
+    sin = sin[:, None, :, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1) if rot < D else out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: Tuple[int, int, int]
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, H, S, D]; positions: [B, 3, S] -- (temporal, height, width) ids.
+    ``sections`` partitions the D//2 frequency slots among the 3 position
+    streams (e.g. (16, 24, 24) for D=128)."""
+    D = x.shape[-1]
+    assert sum(sections) == D // 2, (sections, D)
+    cos_t, sin_t = _rope_angles(positions, D, theta)         # [B, 3, S, D//2]
+    # pick, per frequency slot, which positional stream drives it
+    sel = jnp.concatenate(
+        [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)]
+    )                                                         # [D//2]
+    onehot = jax.nn.one_hot(sel, 3, dtype=jnp.float32)        # [D//2, 3]
+    cos = jnp.einsum("bksf,fk->bsf", cos_t, onehot)           # [B, S, D//2]
+    sin = jnp.einsum("bksf,fk->bsf", sin_t, onehot)
+    cos, sin = cos[:, None], sin[:, None]                     # [B,1,S,D//2]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_for(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.mrope_sections is not None and positions.ndim == 3:
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    if positions.ndim == 3:  # text-only batch through an mrope model
+        positions = positions[:, 0]
+    return apply_rope(x, positions, cfg.rope_theta, cfg.rope_fraction)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def attention_dense(
+    q: jax.Array,            # [B, Hq, Sq, D]
+    k: jax.Array,            # [B, Hkv, Skv, D]
+    v: jax.Array,            # [B, Hkv, Skv, Dv]
+    *,
+    causal: bool,
+    q_positions: jax.Array,  # [Sq] absolute positions of queries
+    kv_positions: jax.Array, # [Skv]
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    kv_len: Optional[jax.Array] = None,   # dynamic valid cache length
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, D)
+    logits = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32),
+        precision=jax.lax.Precision.DEFAULT,
+    ) * (1.0 / math.sqrt(D))
+    logits = _softcap(logits, softcap)
+    mask = jnp.ones((Sq, k.shape[2]), dtype=bool)
+    if causal:
+        mask &= q_positions[:, None] >= kv_positions[None, :]
+    if window is not None:
+        mask &= q_positions[:, None] - kv_positions[None, :] < window
+    if kv_len is not None:
+        mask &= (jnp.arange(k.shape[2]) < kv_len)[None, :]
+    logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Sq, v.shape[-1]).astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_block: int = 1024,
+    kv_block: int = 1024,
+    causal_pack: bool = False,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp.
+
+    Outer ``lax.map`` over q blocks, inner ``lax.scan`` over kv blocks; live
+    memory is O(q_block · kv_block).  Baseline scans ALL kv blocks per q block
+    (masked) — `causal_pack=True` pairs q block i with q block nq-1-i and scans
+    nk+1 joint steps, eliminating the ~2x causal FLOP waste (§Perf).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    # pad to block multiples
+    pad_q = (-Sq) % qb
+    pad_k = (-Skv) % kb
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    qpos = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    kpos = jnp.pad(kv_positions, (0, pad_k), constant_values=jnp.iinfo(jnp.int32).max)
+    nq = qp.shape[2] // qb
+    nk = kp.shape[2] // kb
+
+    qp = qp.reshape(B, Hkv, G, nq, qb, D).transpose(3, 0, 1, 2, 4, 5)   # [nq,B,Hkv,G,qb,D]
+    kp = kp.reshape(B, Hkv, nk, kb, D).transpose(2, 0, 1, 3, 4)          # [nk,B,Hkv,kb,D]
+    vp = vp.reshape(B, Hkv, nk, kb, Dv).transpose(2, 0, 1, 3, 4)
+    qpos_b = qpos.reshape(nq, qb)
+    kpos_b = kpos.reshape(nk, kb)
+
+    def block_update(carry, q_blk, qpos_blk, k_blk, v_blk, kpos_blk, valid):
+        """One online-softmax update; ``valid`` gates the whole block."""
+        acc, m, l = carry
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk.astype(jnp.float32),
+                       k_blk.astype(jnp.float32)) * scale
+        s = _softcap(s, softcap)
+        mask = jnp.ones((qb, kb), dtype=bool)
+        if causal:
+            mask &= qpos_blk[:, None] >= kpos_blk[None, :]
+        if window is not None:
+            mask &= qpos_blk[:, None] - kpos_blk[None, :] < window
+        mask &= (qpos_blk >= 0)[:, None] & (kpos_blk < jnp.iinfo(jnp.int32).max)[None, :]
+        mask &= valid
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+        return acc_new, m_new, l_new
+
+    zero_carry = lambda: (
+        jnp.zeros((B, Hkv, G, qb, Dv), jnp.float32),
+        jnp.full((B, Hkv, G, qb), -jnp.inf, jnp.float32),
+        jnp.zeros((B, Hkv, G, qb), jnp.float32),
+    )
+
+    if not (causal and causal_pack):
+        def per_q_block(args):
+            q_blk, qpos_blk = args
+            def kv_step(carry, kv):
+                k_blk, v_blk, kpos_blk = kv
+                return block_update(carry, q_blk, qpos_blk, k_blk, v_blk,
+                                    kpos_blk, jnp.bool_(True)), None
+            (acc, m, l), _ = jax.lax.scan(kv_step, zero_carry(), (kp, vp, kpos_b))
+            return acc / jnp.maximum(l, 1e-30)[..., None]
+        out = jax.lax.map(per_q_block, (qp, qpos_b))           # [nq,B,Hkv,G,qb,Dv]
+    else:
+        # ---- causal pair-packing: q block i teams with q block nq-1-i ------
+        assert nq == nk and Sq == Skv, "causal_pack requires square self-attn"
+        npairs = (nq + 1) // 2
+        idx_lo = jnp.arange(npairs)
+        idx_hi = nq - 1 - idx_lo
+
+        def per_pair(pair):
+            i_lo, i_hi = pair
+            q_lo, qpos_lo = qp[i_lo], qpos_b[i_lo]
+            q_hi, qpos_hi = qp[i_hi], qpos_b[i_hi]
+
+            def step(carry, s_idx):
+                c_lo, c_hi = carry
+                # steps 0..i_lo serve the low q block (kv = s); the remaining
+                # steps serve the high q block (kv = s - i_lo - 1)
+                serve_lo = s_idx <= i_lo
+                kv_idx = jnp.where(serve_lo, s_idx, s_idx - i_lo - 1)
+                kv_idx = jnp.clip(kv_idx, 0, nk - 1)
+                k_blk = jax.lax.dynamic_index_in_dim(kp, kv_idx, 0, keepdims=False)
+                v_blk = jax.lax.dynamic_index_in_dim(vp, kv_idx, 0, keepdims=False)
+                kpos_blk = jax.lax.dynamic_index_in_dim(kpos_b, kv_idx, 0, keepdims=False)
+                q_blk = jnp.where(serve_lo, q_lo, q_hi)
+                qpos_blk = jnp.where(serve_lo, qpos_lo, qpos_hi)
+                carry_in = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(serve_lo, a, b), c_lo, c_hi)
+                upd = block_update(carry_in, q_blk, qpos_blk, k_blk, v_blk,
+                                   kpos_blk, jnp.bool_(True))
+                c_lo = jax.tree_util.tree_map(
+                    lambda old, new: jnp.where(serve_lo, new, old), c_lo, upd)
+                c_hi = jax.tree_util.tree_map(
+                    lambda old, new: jnp.where(serve_lo, old, new), c_hi, upd)
+                return (c_lo, c_hi), None
+
+            n_steps = nq + 1  # (i_lo+1) + (i_hi+1) = nq + 1 joint kv visits
+            (c_lo, c_hi), _ = jax.lax.scan(
+                step, (zero_carry(), zero_carry()), jnp.arange(n_steps))
+            fin = lambda c: c[0] / jnp.maximum(c[2], 1e-30)[..., None]
+            return fin(c_lo), fin(c_hi)
+
+        out_lo, out_hi = jax.lax.map(per_pair, (idx_lo, idx_hi))
+        # stitch pairs back into q-block order
+        out = jnp.zeros((nq, B, Hkv, G, qb, Dv), jnp.float32)
+        out = out.at[idx_lo].set(out_lo)
+        out = out.at[idx_hi].set(out_hi)
+
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, nq * qb, Dv)
+    return out[:, :, :Sq].astype(q.dtype)
+
+
+def attention(
+    cfg: ModelConfig,
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *,
+    causal: bool = True,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    kv_len: Optional[jax.Array] = None,
+    causal_pack: Optional[bool] = None,
+) -> jax.Array:
+    """Dispatching attention core.  Decode (Sq small) and short-seq use the
+    dense path; long sequences use the chunked online-softmax path."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv)
+    if Sq <= 2048 or kv_len is not None or cfg.attn_impl == "dense":
+        return attention_dense(
+            q, k, v, causal=causal, q_positions=q_positions,
+            kv_positions=kv_positions, window=window,
+            softcap=cfg.attn_logit_softcap, kv_len=kv_len)
+    pack = cfg.attn_impl == "chunked_packed" if causal_pack is None else causal_pack
+    tp_size = 16  # decision only needs divisibility vs the activation policy
+    from repro.parallel.activations import _STATE as _ACT
+    tp_size = _ACT["tp_size"]
+    heads_misaligned = (_ACT["tp"] is not None and tp_size > 1
+                        and (Hq % tp_size or Hkv % tp_size))
+    if (heads_misaligned and Sq == Skv and cfg.attn_impl == "bh_flat"
+            and bh_flat_entry(B, Hq) is not None):
+        # §Perf, refuted: GSPMD replicates through the repeat+flatten chain
+        # (+1.7 TB all-gather, 5x dot FLOPs).  Kept opt-in for the record.
+        # §Perf: flattened (batch·head)-parallel attention — when heads do
+        # not divide tp, GSPMD splits *within* heads (g=2 partial-softmax
+        # all-reduces every kv block).  Flattening B×H and sharding jointly
+        # over dp×tp makes attention embarrassingly parallel; the kv-repeat
+        # and boundary all-to-alls are orders of magnitude cheaper.
+        rep = Hq // Hkv
+        kr = jnp.repeat(k, rep, axis=1).reshape(B * Hq, 1, Skv, D)
+        vr = jnp.repeat(v, rep, axis=1).reshape(B * Hq, 1, Skv, v.shape[-1])
+        qf = shard_bh(q.reshape(B * Hq, 1, Sq, D))
+        kr, vr = shard_bh(kr), shard_bh(vr)
+        out = flash_attention(
+            qf, kr, vr, jnp.asarray(q_positions, jnp.int32),
+            jnp.asarray(kv_positions, jnp.int32),
+            causal, window, cfg.attn_q_block, cfg.attn_kv_block, pack)
+        return out.reshape(B, Hq, Sq, v.shape[-1])
+    if heads_misaligned and Sq == Skv and cfg.attn_row_parallel:
+        from repro.models import attn_sm
+        if attn_sm.applicable(B, Hq, Sq, Skv):
+            # §Perf winner: explicit row-parallel attention via shard_map —
+            # one boundary all-gather instead of per-kv-block g=2 ARs
+            return attn_sm.flash_attention_shard_map(
+                q, k, v, jnp.asarray(q_positions, jnp.int32),
+                jnp.asarray(kv_positions, jnp.int32),
+                causal, window, cfg.attn_q_block, cfg.attn_kv_block, pack)
+    return flash_attention(
+        q, k, v, jnp.asarray(q_positions, jnp.int32),
+        jnp.asarray(kv_positions, jnp.int32),
+        causal, window, cfg.attn_q_block, cfg.attn_kv_block, pack)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + rope + core + out proj)
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def init_attn(cfg: ModelConfig, key) -> dict:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], cfg.d_model, cfg.n_heads * hd, cfg.param_dtype),
+        "wk": init_linear(ks[1], cfg.d_model, cfg.n_kv_heads * hd, cfg.param_dtype),
+        "wv": init_linear(ks[2], cfg.d_model, cfg.n_kv_heads * hd, cfg.param_dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, cfg.d_model, cfg.param_dtype,
+                          scale=1.0 / math.sqrt(cfg.n_heads * hd * 2 * cfg.num_layers)),
+    }
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:    # [B,S,n*hd] -> [B,n,S,hd]
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, -1).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:             # [B,n,S,hd] -> [B,S,n*hd]
+    B, n, S, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, n * hd)
+
+
+def attn_block(
+    cfg: ModelConfig, p: dict, x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_state: Optional[dict] = None,    # decode: {"k","v","len"} cache for this layer
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Standard multi-head GQA attention.  Returns (out, new_kv_state).
+
+    * training/prefill: kv_state None -> self-attention over x.
+    * decode: kv_state holds the cache; x is the new token(s).
+    * cross attention (whisper): cross_kv = (k, v) precomputed from encoder.
+    """
+    dt = x.dtype
+    q = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt)), cfg.n_heads)
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = attention(cfg, q, k, v, causal=False)
+        new_state = None
+    else:
+        k = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wk"].astype(dt)), cfg.n_kv_heads)
+        v = _split_heads(jnp.einsum("bsd,df->bsf", x, p["wv"].astype(dt)), cfg.n_kv_heads)
+        # NOTE(§Perf, refuted): sequence-sharding the attention interior when
+        # heads misalign with tp (llama 24H/16) was tried here and REGRESSED
+        # (+109 GB wire, +42 TF: GSPMD fights the blocked flash reshapes).
+        # positions: [S] | [B,S] | [B,3,S] (mrope). Broadcast to batched form
+        # for rope; 1-D masking positions use batch row 0 / temporal stream.
+        posb = positions[None].repeat(x.shape[0], 0) if positions.ndim == 1 else positions
+        qpos1 = posb[0] if posb.ndim == 2 else posb[0, 0]
+        q = rope_for(cfg, q, posb)
+        k = rope_for(cfg, k, posb)
+        if kv_state is None:
+            out = attention(cfg, q, k, v, causal=causal, window=window,
+                            q_positions=qpos1, kv_positions=qpos1)
+            new_state = {"k": k, "v": v}
+        else:
+            # append new kv at position ``len`` (ring for SWA windows)
+            cache_k, cache_v, cur_len = kv_state["k"], kv_state["v"], kv_state["len"]
+            S_cache = cache_k.shape[2]
+            if window is not None and S_cache == window:
+                slot = cur_len % window
+            else:
+                slot = cur_len
+            cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, 2)
+            cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, 2)
+            # absolute positions of cache entries
+            if window is not None and S_cache == window:
+                ring_idx = jnp.arange(S_cache)
+                abs_pos = cur_len - ((slot - ring_idx) % window)
+                kvpos = jnp.where(abs_pos >= 0, abs_pos, jnp.iinfo(jnp.int32).max)
+                kv_valid = None
+            else:
+                kvpos = jnp.arange(S_cache)
+                kv_valid = cur_len + q.shape[2]
+            out = attention(cfg, q, cache_k.astype(dt), cache_v.astype(dt),
+                            causal=True, window=window,
+                            q_positions=qpos1, kv_positions=kvpos, kv_len=kv_valid)
+            new_state = {"k": cache_k, "v": cache_v, "len": cur_len + q.shape[2]}
+    y = jnp.einsum("bsf,fd->bsd", _merge_heads(out), p["wo"].astype(dt))
+    y = checkpoint_name(y, "attn_out")   # post-AR (TP)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / math.sqrt(d_ff * 2 * cfg.num_layers)
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": init_linear(ks[0], cfg.d_model, d_ff, cfg.param_dtype),
+            "w_up": init_linear(ks[1], cfg.d_model, d_ff, cfg.param_dtype),
+            "w_down": init_linear(ks[2], d_ff, cfg.d_model, cfg.param_dtype, scale=out_scale),
+        }
+    return {
+        "w_up": init_linear(ks[1], cfg.d_model, d_ff, cfg.param_dtype),
+        "w_down": init_linear(ks[2], d_ff, cfg.d_model, cfg.param_dtype, scale=out_scale),
+    }
+
+
+def ffn(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        if cfg.act == "relu2":
+            h = jnp.square(jax.nn.relu(u.astype(jnp.float32))).astype(dt)
+        else:
+            h = jax.nn.gelu(u.astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+    return checkpoint_name(out, "ffn_out")  # post-AR (TP)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+
+def init_embed(cfg: ModelConfig, key) -> dict:
+    p = {"tok": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                 * 0.02).astype(cfg.param_dtype)}
+    return p
+
+
+def embed(cfg: ModelConfig, p: dict, tokens: jax.Array) -> jax.Array:
+    return shard_embed_out(
+        jnp.take(p["tok"], tokens, axis=0).astype(cfg.compute_dtype))
+
+
+def unembed(cfg: ModelConfig, p_embed: dict, p_head, x: jax.Array) -> jax.Array:
+    w = p_embed["tok"].T if (cfg.tie_embeddings or p_head is None) else p_head
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    logits = shard_logits(logits)
+    return logits.astype(jnp.float32) if cfg.logits_fp32 else logits
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, z_weight: float = 1e-4):
+    """Cross-entropy with z-loss; labels==-100 are masked.  fp32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = jnp.square(lse)
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom + z_weight * jnp.sum(zl * mask) / denom
+    return loss
+
+
+def remat_wrap(cfg: ModelConfig, fn):
+    """Wrap a layer body in jax.checkpoint per the config policy.
+
+    ``comm`` (§Perf winner): full remat EXCEPT collective outputs — gathered
+    FSDP weights, post-psum MoE outputs, AR'd attention/FFN outputs are
+    saved, so the backward recompute never re-runs collectives (which the
+    dry-run showed cost ~35% of total wire bytes under plain full remat).
+    """
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    if cfg.remat == "comm":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "fsdp_w", "moe_y", "attn_out", "ffn_out")
+        return jax.checkpoint(fn, policy=policy)
+    if cfg.remat == "comm_lite":
+        # like comm but re-gathers FSDP weights in bwd (trades ~2x weight
+        # all-gather wire for not pinning gathered weights in HBM)
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "moe_y", "attn_out", "ffn_out")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)

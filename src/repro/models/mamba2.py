@@ -1,0 +1,310 @@
+"""Mamba-2 (state-space duality / SSD) language model, pure JAX.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060 §6: within a chunk
+the recurrence is computed in its "attention" (quadratic) dual form; chunk
+boundary states are passed through a linear scan.  Decode is the O(1)
+recurrent update on a ``[B, H, P, N]`` state.
+
+TPU adaptation note: the chunk size (``cfg.ssm_chunk``) is the VMEM tile of
+the Pallas kernel (`repro.kernels.ssd_scan`); this jnp implementation is the
+oracle and the lowering path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.parallel.activations import shard_acts
+from repro.models.common import ModelConfig, register
+from repro.models.transformer import _stack_init
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable 'segment sum' producing L[i, j] = sum_{k=j+1..i} x[k] (i >= j).
+
+    x: [..., Q] -> [..., Q, Q] lower-triangular log-decay matrix."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,      # [B, S, H, P]
+    dt: jax.Array,     # [B, S, H]   (already softplus'd, >0)
+    A: jax.Array,      # [H]         (negative)
+    B_: jax.Array,     # [B, S, G, N]
+    C: jax.Array,      # [B, S, G, N]
+    *,
+    chunk: int,
+    init_state: jax.Array | None = None,   # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,H,P], final_state [B,H,P,N]).  fp32 internals."""
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = B_.reshape(Bsz, nc, chunk, G, N).astype(f32)
+    Cc = C.reshape(Bsz, nc, chunk, G, N).astype(f32)
+
+    dA = dtc * A.astype(f32)[None, None, None, :]          # [B,nc,Q,H]
+    dA_cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+    dA_total = dA_cum[:, :, -1]                            # [B,nc,H]
+
+    # ---- intra-chunk (dual quadratic form) -------------------------------
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))      # [B,nc,H,Q,Q]
+    # scores over groups; broadcast G->H
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)          # [B,nc,G,Q,Q]
+    CB = jnp.repeat(CB, rep, axis=2)                       # [B,nc,H,Q,Q]
+    M = CB * Lmat
+    xdt = xc * dtc[..., None]                              # [B,nc,Q,H,P]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M, xdt)
+
+    # ---- chunk states ------------------------------------------------------
+    decay_to_end = jnp.exp(dA_total[:, :, None, :] - dA_cum)   # [B,nc,Q,H]
+    Bh = jnp.repeat(Bc, rep, axis=3)                       # [B,nc,Q,H,N]
+    states = jnp.einsum("bcqhn,bcqhp,bcqh->bchpn", Bh, xdt, decay_to_end)
+
+    # ---- inter-chunk scan ---------------------------------------------------
+    h0 = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def scan_fn(h, inp):
+        st, dA_tot = inp                                   # [B,H,P,N], [B,H]
+        h_out = h                                           # state BEFORE chunk
+        h_next = h * jnp.exp(dA_tot)[:, :, None, None] + st
+        return h_next, h_out
+
+    hT, h_before = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), dA_total.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)           # [B,nc,H,P,N]
+
+    Ch = jnp.repeat(Cc, rep, axis=3)                       # [B,nc,Q,H,N]
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         Ch, h_before, jnp.exp(dA_cum))
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), hT
+
+
+def ssd_decode_step(
+    x: jax.Array,      # [B, 1, H, P]
+    dt: jax.Array,     # [B, 1, H]
+    A: jax.Array,      # [H]
+    B_: jax.Array,     # [B, 1, G, N]
+    C: jax.Array,      # [B, 1, G, N]
+    state: jax.Array,  # [B, H, P, N] fp32
+) -> Tuple[jax.Array, jax.Array]:
+    f32 = jnp.float32
+    H = x.shape[2]
+    rep = H // B_.shape[2]
+    xb = x[:, 0].astype(f32)                                # [B,H,P]
+    dtb = dt[:, 0].astype(f32)                              # [B,H]
+    Bb = jnp.repeat(B_[:, 0], rep, axis=1).astype(f32)      # [B,H,N]
+    Cb = jnp.repeat(C[:, 0], rep, axis=1).astype(f32)
+    decay = jnp.exp(dtb * A.astype(f32)[None])              # [B,H]
+    new_state = (state * decay[..., None, None]
+                 + jnp.einsum("bhp,bhn,bh->bhpn", xb, Bb, dtb))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cb)
+    return y[:, None].astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (projections + conv + SSD + gated norm)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(cfg: ModelConfig, key) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    H, G, N = cfg.ssm_heads, cfg.ssm_groups, cfg.ssm_state
+    cw = cfg.ssm_conv_width
+    ks = jax.random.split(key, 7)
+    dt_init = jnp.log(jnp.exp(jnp.linspace(1e-3, 0.1, H)) - 1.0)  # inv softplus
+    return {
+        "w_z": L.init_linear(ks[0], d, di, cfg.param_dtype),
+        "w_x": L.init_linear(ks[1], d, di, cfg.param_dtype),
+        "w_B": L.init_linear(ks[2], d, G * N, cfg.param_dtype),
+        "w_C": L.init_linear(ks[3], d, G * N, cfg.param_dtype),
+        "w_dt": L.init_linear(ks[4], d, H, cfg.param_dtype),
+        "dt_bias": dt_init.astype(jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),               # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "conv_x": (jax.random.normal(ks[5], (cw, di), jnp.float32)
+                   / math.sqrt(cw)).astype(cfg.param_dtype),
+        "conv_B": (jax.random.normal(ks[6], (cw, G * N), jnp.float32)
+                   / math.sqrt(cw)).astype(cfg.param_dtype),
+        "conv_C": (jax.random.normal(ks[6], (cw, G * N), jnp.float32)
+                   / math.sqrt(cw)).astype(cfg.param_dtype),
+        "gate_norm": {"scale": jnp.ones((di,), cfg.param_dtype)},
+        "w_out": L.init_linear(ks[4], di, d, cfg.param_dtype,
+                               scale=1.0 / math.sqrt(di * 2 * cfg.num_layers)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv.  x [B,S,Cd], w [K,Cd].
+
+    Returns (y, new_state) where state is the trailing K-1 inputs."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+            for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def mamba_block_fwd(cfg: ModelConfig, p: Dict, u: jax.Array,
+                    state: Dict | None = None):
+    """u: [B,S,d].  state (decode): {"ssm": [B,H,P,N] f32, "conv_*": trailing}."""
+    Bsz, S, _ = u.shape
+    H, G, N, P = cfg.ssm_heads, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_headdim
+    dt_ = u.dtype
+    z = jnp.einsum("bsd,df->bsf", u, p["w_z"].astype(dt_))
+    x = jnp.einsum("bsd,df->bsf", u, p["w_x"].astype(dt_))
+    Bp = jnp.einsum("bsd,df->bsf", u, p["w_B"].astype(dt_))
+    Cp = jnp.einsum("bsd,df->bsf", u, p["w_C"].astype(dt_))
+    dt = jnp.einsum("bsd,df->bsf", u, p["w_dt"].astype(dt_)).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None])
+
+    cs = {} if state is None else state
+    x, cx = _causal_conv(x, p["conv_x"], cs.get("conv_x"))
+    Bp, cB = _causal_conv(Bp, p["conv_B"], cs.get("conv_B"))
+    Cp, cC = _causal_conv(Cp, p["conv_C"], cs.get("conv_C"))
+
+    xh = x.reshape(Bsz, S, H, P)
+    Bh = Bp.reshape(Bsz, S, G, N)
+    Ch = Cp.reshape(Bsz, S, G, N)
+    A = -jnp.exp(p["A_log"])
+
+    if state is None:
+        y, hT = ssd_chunked(xh, dt, A, Bh, Ch, chunk=cfg.ssm_chunk)
+    else:
+        y, hT = ssd_decode_step(xh, dt, A, Bh, Ch, state["ssm"])
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_),
+                   p["gate_norm"]["scale"])
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"].astype(dt_))
+    new_state = {"ssm": hT, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+    return out, new_state
+
+
+def init_mamba_layer(cfg: ModelConfig, key) -> Dict:
+    return {"ln": L.init_norm(cfg, cfg.d_model),
+            "mamba": init_mamba_block(cfg, key)}
+
+
+def mamba_layer_fwd(cfg: ModelConfig, lp: Dict, x: jax.Array, state=None):
+    h = L.apply_norm(cfg, lp["ln"], x)
+    y, new_state = mamba_block_fwd(cfg, lp["mamba"], h, state)
+    return shard_acts(x + y), new_state
+
+
+@register("ssm")
+class Mamba2LM:
+    @staticmethod
+    def init(cfg: ModelConfig, key) -> Dict:
+        ke, kl, kh = jax.random.split(key, 3)
+        return {
+            "embed": L.init_embed(cfg, ke),
+            "layers": _stack_init(lambda k: init_mamba_layer(cfg, k), kl,
+                                  cfg.num_layers),
+            "final_norm": L.init_norm(cfg, cfg.d_model),
+            "lm_head": L.init_linear(kh, cfg.d_model, cfg.vocab_size,
+                                     cfg.param_dtype),
+        }
+
+    @staticmethod
+    def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array) -> jax.Array:
+        x = L.embed(cfg, params["embed"], tokens)
+
+        def body(x, lp):
+            y, _ = mamba_layer_fwd(cfg, lp, x)
+            return y, None
+
+        x, _ = jax.lax.scan(L.remat_wrap(cfg, body), x, params["layers"])
+        return L.apply_norm(cfg, params["final_norm"], x)
+
+    @staticmethod
+    def loss(cfg: ModelConfig, params: Dict, batch: Dict):
+        hidden = Mamba2LM.forward(cfg, params, batch["tokens"])
+        logits = L.unembed(cfg, params["embed"], params.get("lm_head"), hidden)
+        loss = L.softmax_xent(logits, batch["labels"])
+        return loss, {"loss": loss}
+
+    # -- inference ----------------------------------------------------------
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+        H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+        cw, di, gn = cfg.ssm_conv_width, cfg.d_inner, cfg.ssm_groups * cfg.ssm_state
+        Lr = cfg.num_layers
+        return {
+            "ssm": jnp.zeros((Lr, batch, H, P, N), jnp.float32),
+            "conv_x": jnp.zeros((Lr, batch, cw - 1, di), cfg.compute_dtype),
+            "conv_B": jnp.zeros((Lr, batch, cw - 1, gn), cfg.compute_dtype),
+            "conv_C": jnp.zeros((Lr, batch, cw - 1, gn), cfg.compute_dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+
+    @staticmethod
+    def prefill(cfg: ModelConfig, params: Dict, batch: Dict):
+        """Prefill = full forward, capturing final recurrent state per layer."""
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        x = L.embed(cfg, params["embed"], tokens)
+
+        def body(x, lp):
+            h = L.apply_norm(cfg, lp["ln"], x)
+            y, st = mamba_block_fwd(cfg, lp["mamba"], h)
+            return x + y, (st["ssm"], st["conv_x"], st["conv_B"], st["conv_C"])
+
+        x, (ssm, cx, cB, cC) = jax.lax.scan(L.remat_wrap(cfg, body), x,
+                                            params["layers"])
+        hidden = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+        logits = L.unembed(cfg, params["embed"], params.get("lm_head"), hidden)
+        cache = {"ssm": ssm, "conv_x": cx, "conv_B": cB, "conv_C": cC,
+                 "len": jnp.asarray(S, jnp.int32)}
+        return logits, cache
+
+    @staticmethod
+    def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, batch: Dict):
+        tokens = batch["tokens"]
+        x = L.embed(cfg, params["embed"], tokens)
+
+        def body(x, inp):
+            lp, ssm, cx, cB, cC = inp
+            st = {"ssm": ssm, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+            y, st = mamba_layer_fwd(cfg, lp, x, state=st)
+            return y, (st["ssm"], st["conv_x"], st["conv_B"], st["conv_C"])
+
+        x, (ssm, cx, cB, cC) = jax.lax.scan(
+            body, x, (params["layers"], cache["ssm"], cache["conv_x"],
+                      cache["conv_B"], cache["conv_C"]))
+        hidden = L.apply_norm(cfg, params["final_norm"], x)
+        logits = L.unembed(cfg, params["embed"], params.get("lm_head"), hidden)
+        return logits, {"ssm": ssm, "conv_x": cx, "conv_B": cB, "conv_C": cC,
+                        "len": cache["len"] + tokens.shape[1]}

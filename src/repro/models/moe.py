@@ -1,0 +1,454 @@
+"""Mixture-of-Experts transformers: Mixtral (GQA + SWA) and DeepSeek-V2-Lite (MLA).
+
+Design notes
+------------
+* **Grouped dispatch**: token routing (argsort + scatter) is performed inside a
+  vmapped "dispatch group" dimension of size ``cfg.moe_dispatch_groups`` which
+  the launcher shards over the ``data`` mesh axis.  GSPMD therefore keeps every
+  sort/scatter *local to its data shard* — no global all-gather of the token
+  stream (the data-locality principle of the paper, applied to expert routing).
+* **Expert parallelism**: expert weights keep ``d_ff`` sharded over ``model``
+  (TP-within-expert), so dispatch needs no all-to-all; the down-projection
+  produces a partial sum that GSPMD all-reduces over ``model``.
+* **MLA** (DeepSeek): compressed KV cache (c_kv ⊕ rope-key); the *naive* decode
+  expands c_kv per step — the absorbed-matmul variant is a §Perf hillclimb.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.models import layers as L
+from repro.parallel.activations import shard_acts
+from repro.models.common import ModelConfig, register
+from repro.models.transformer import DenseTransformer, _stack_init
+
+# ---------------------------------------------------------------------------
+# Routed expert FFN
+# ---------------------------------------------------------------------------
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _psum_id_bwd(x, axis_name):
+    return jax.lax.psum(x, axis_name)
+
+
+def _psum_id_fwd(x, axis_name):
+    return jax.lax.psum(x, axis_name), None
+
+
+def _psum_id_rev(axis_name, _, dy):
+    # Megatron "g" op: fwd = psum over tp, bwd = identity — the cotangent is
+    # already replicated across tp (downstream compute is tp-replicated), so
+    # autodiff's default psum-in-bwd would be a redundant 16-way all-reduce.
+    return (dy,)
+
+
+_psum_id_bwd.defvjp(_psum_id_fwd, _psum_id_rev)
+
+
+def init_moe_ffn(cfg: ModelConfig, key) -> Dict:
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f * 2 * cfg.num_layers)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E), jnp.float32) * scale_in
+                   ).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * scale_in
+                   ).astype(cfg.param_dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * scale_in
+                 ).astype(cfg.param_dtype),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32) * scale_out
+                   ).astype(cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_ffn(cfg, ks[4], d_ff=cfg.n_shared_experts * f)
+    return p
+
+
+def _dispatch_group(cfg: ModelConfig, p: Dict, xg: jax.Array,
+                    partial_sum_axis=None) -> Tuple[jax.Array, jax.Array]:
+    """Route one dispatch group.  xg: [T, d] -> (out [T, d], aux_loss scalar).
+
+    ``partial_sum_axis``: inside shard_map, the down-projection contracts a
+    tp-sharded d_ff — psum the partial over that axis."""
+    T, d = xg.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cap = int(math.ceil(T * k / E * cfg.capacity_factor))
+
+    logits = jnp.einsum("td,de->te", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # [T, E]
+    gate, idx = jax.lax.top_k(probs, k)                          # [T, k]
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch (local to this group) ----------------------
+    flat_e = idx.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)                     # [T*k]
+    sorted_e = flat_e[order]
+    tok_of = order // k
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))        # [E]
+    pos = jnp.arange(T * k) - seg_start[sorted_e]
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+
+    buf = jnp.zeros((E, cap, d), xg.dtype)
+    contrib = jnp.where(keep[:, None], xg[tok_of], 0)
+    buf = buf.at[sorted_e, pos_c].add(contrib)                   # dropped -> +0
+
+    # ---- expert compute (f sharded over `model`) -------------------------
+    dt = xg.dtype
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))    # partial-sum AR
+    if partial_sum_axis is not None:
+        y = _psum_id_bwd(y, partial_sum_axis)
+        y = checkpoint_name(y, "moe_y")
+
+    # ---- un-dispatch ------------------------------------------------------
+    gflat = gate.reshape(T * k)[order]
+    back = jnp.where(keep[:, None], y[sorted_e, pos_c] * gflat[:, None].astype(dt), 0)
+    out = jnp.zeros((T, d), dt).at[tok_of].add(back)
+
+    # ---- load-balancing aux (Switch-style) -------------------------------
+    frac_tokens = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return out, aux
+
+
+def _moe_ffn_shard_map(cfg: ModelConfig, p: Dict, x: jax.Array):
+    """§Perf: fully-manual MoE layer via shard_map.
+
+    GSPMD's auto-partitioning of the vmapped dispatch generated ~1.6 TB/chip
+    of all-reduce on deepseek train_4k (it replicates the scatter/gather
+    chains).  shard_map makes every step explicit and local:
+
+      * tokens stay on their data shard (the paper's locality principle);
+      * expert weights: FSDP-sharded over data -> one explicit all-gather
+        per layer (bwd: reduce-scatter of the weight grads), tp-sharded on
+        d_ff so the expert matmuls are column-parallel;
+      * ONE psum over `model` after the down-projection;
+      * dispatch (sort/scatter) runs on local tokens only — zero comm.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.parallel.activations import _STATE as _ACT
+
+    mesh = _ACT["mesh"]
+    dp, tp, fsdp = _ACT["dp"], _ACT["tp"], _ACT["fsdp"]
+    B, S, d = x.shape
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+
+    def body(xl, router, wg, wu, wd):
+        # xl: [B_l, S, d]; wg/wu: [E, d(/fsdp), f_l]; wd: [E, f_l, d(/fsdp)]
+        if fsdp is not None:
+            wg = jax.lax.all_gather(wg, fsdp, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, fsdp, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, fsdp, axis=2, tiled=True)
+        wg = checkpoint_name(wg, "fsdp_w")
+        wu = checkpoint_name(wu, "fsdp_w")
+        wd = checkpoint_name(wd, "fsdp_w")
+        pl = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
+        T_l = xl.shape[0] * xl.shape[1]
+        out_l, aux_l = _dispatch_group(cfg, pl, xl.reshape(T_l, d),
+                                       partial_sum_axis=tp)
+        aux_l = jax.lax.pmean(aux_l, dp_axes)
+        return out_l.reshape(xl.shape), aux_l
+
+    in_specs = (P(dp, None, None),               # x: batch over dp
+                P(),                             # router replicated
+                P(None, fsdp, tp),               # w_gate [E, d, f]
+                P(None, fsdp, tp),               # w_up
+                P(None, tp, fsdp))               # w_down [E, f, d]
+    out_specs = (P(dp, None, None), P())
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    out, aux = fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return out, aux
+
+
+def moe_ffn(cfg: ModelConfig, p: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out, aux)."""
+    from repro.parallel.activations import _STATE as _ACT
+    B, S, d = x.shape
+    use_sm = (_ACT["mesh"] is not None and _ACT["dp"] is not None
+              and B % _ACT["dp_size"] == 0 and S > 1
+              and cfg.d_ff_expert % max(_ACT["tp_size"], 1) == 0)
+    # S == 1 (decode): the per-step explicit FSDP weight gather would cost
+    # more than it saves on 1 token/seq (§Perf: measured 0.05x regression);
+    # decode keeps the GSPMD path.
+    if use_sm:
+        out, aux = _moe_ffn_shard_map(cfg, p, x)
+    else:
+        G = max(1, min(cfg.moe_dispatch_groups, B * S))
+        while (B * S) % G:
+            G -= 1
+        xf = x.reshape(G, (B * S) // G, d)
+        out, aux = jax.vmap(lambda xg: _dispatch_group(cfg, p, xg))(xf)
+        out = out.reshape(B, S, d)
+        aux = jnp.mean(aux)
+    if cfg.n_shared_experts:
+        out = out + L.ffn(cfg, p["shared"], x)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(cfg: ModelConfig, key) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    nope, rope, vdim, lora = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": L.init_linear(ks[0], d, H * (nope + rope), cfg.param_dtype),
+        "w_dkv": L.init_linear(ks[1], d, lora + rope, cfg.param_dtype),
+        "w_uk": L.init_linear(ks[2], lora, H * nope, cfg.param_dtype),
+        "w_uv": L.init_linear(ks[3], lora, H * vdim, cfg.param_dtype),
+        "wo": L.init_linear(ks[4], H * vdim, d, cfg.param_dtype,
+                            scale=1.0 / math.sqrt(H * vdim * 2 * cfg.num_layers)),
+    }
+
+
+def _mla_qkv(cfg: ModelConfig, p: Dict, x: jax.Array, positions: jax.Array):
+    """Project x to (q, c_kv, k_rope).  positions: [S] absolute."""
+    B, S, _ = x.shape
+    H, nope, rope = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt))
+    q = q.reshape(B, S, H, nope + rope).transpose(0, 2, 1, 3)     # [B,H,S,nope+rope]
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    posb = positions[None, :].repeat(B, 0)
+    q_rope = L.apply_rope(q_rope, posb, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    dkv = jnp.einsum("bsd,df->bsf", x, p["w_dkv"].astype(dt))
+    c_kv, k_rope = dkv[..., :cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank:]
+    k_rope = L.apply_rope(k_rope[:, None], posb, cfg.rope_theta)  # [B,1,S,rope]
+    return q, c_kv, k_rope
+
+
+def _mla_expand(cfg: ModelConfig, p: Dict, c_kv: jax.Array, k_rope: jax.Array):
+    """Expand compressed cache to per-head K/V.  c_kv [B,S,lora]."""
+    B, S, _ = c_kv.shape
+    H, nope, vdim = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    dt = c_kv.dtype
+    k_nope = jnp.einsum("bsl,lf->bsf", c_kv, p["w_uk"].astype(dt))
+    k_nope = k_nope.reshape(B, S, H, nope).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsl,lf->bsf", c_kv, p["w_uv"].astype(dt))
+    v = v.reshape(B, S, H, vdim).transpose(0, 2, 1, 3)
+    k_rope_b = jnp.broadcast_to(k_rope, (B, H, S, cfg.qk_rope_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+def mla_block(cfg: ModelConfig, p: Dict, x: jax.Array, positions: jax.Array,
+              kv_state: Optional[Dict] = None):
+    B, S, _ = x.shape
+    q, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    if kv_state is None:
+        k, v = _mla_expand(cfg, p, c_kv, k_rope)
+        out = L.attention(cfg, q, k, v, causal=True,
+                          q_positions=positions, kv_positions=positions)
+        new_state = {"c_kv": c_kv, "k_rope": k_rope[:, 0], "len": None}
+    else:
+        cur = kv_state["len"]
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            kv_state["c_kv"], c_kv.astype(kv_state["c_kv"].dtype), cur, 1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            kv_state["k_rope"], k_rope[:, 0].astype(kv_state["k_rope"].dtype), cur, 1)
+        k, v = _mla_expand(cfg, p, cc.astype(x.dtype), cr.astype(x.dtype)[:, None])
+        Smax = cc.shape[1]
+        out = L.attention(cfg, q, k, v, causal=True,
+                          q_positions=positions,
+                          kv_positions=jnp.arange(Smax),
+                          kv_len=cur + S)
+        new_state = {"c_kv": cc, "k_rope": cr, "len": cur + S}
+    y = jnp.einsum("bsf,fd->bsd", L._merge_heads(out), p["wo"].astype(x.dtype))
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# MoE transformer
+# ---------------------------------------------------------------------------
+
+
+def init_moe_layer(cfg: ModelConfig, key, dense_ffn: bool = False) -> Dict:
+    k1, k2 = jax.random.split(key)
+    attn = init_mla(cfg, k1) if cfg.kv_lora_rank else L.init_attn(cfg, k1)
+    ff = (L.init_ffn(cfg, k2, d_ff=cfg.d_ff_dense or cfg.d_ff)
+          if dense_ffn else init_moe_ffn(cfg, k2))
+    return {"ln1": L.init_norm(cfg, cfg.d_model), "attn": attn,
+            "ln2": L.init_norm(cfg, cfg.d_model), "ffn": ff}
+
+
+def moe_layer_fwd(cfg: ModelConfig, lp: Dict, x: jax.Array, positions,
+                  kv_state=None, dense_ffn: bool = False):
+    h = L.apply_norm(cfg, lp["ln1"], x)
+    if cfg.kv_lora_rank:
+        a, new_state = mla_block(cfg, lp["attn"], h, positions, kv_state=kv_state)
+    else:
+        a, new_state = L.attn_block(cfg, lp["attn"], h, positions, causal=True,
+                                    window=cfg.window, kv_state=kv_state)
+    x = x + a
+    h2 = L.apply_norm(cfg, lp["ln2"], x)
+    if dense_ffn:
+        f, aux = L.ffn(cfg, lp["ffn"], h2), jnp.float32(0)
+    else:
+        f, aux = moe_ffn(cfg, lp["ffn"], h2)
+    return shard_acts(x + f), new_state, aux
+
+
+@register("moe")
+class MoETransformer:
+    @staticmethod
+    def init(cfg: ModelConfig, key) -> Dict:
+        ke, k0, kl, kh = jax.random.split(key, 4)
+        n_scan = cfg.num_layers - cfg.n_dense_layers
+        params = {
+            "embed": L.init_embed(cfg, ke),
+            "layers": _stack_init(lambda k: init_moe_layer(cfg, k), kl, n_scan),
+            "final_norm": L.init_norm(cfg, cfg.d_model),
+        }
+        if cfg.n_dense_layers:
+            dks = jax.random.split(k0, cfg.n_dense_layers)
+            params["dense_layers"] = [
+                init_moe_layer(cfg, dk, dense_ffn=True) for dk in dks]
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.init_linear(kh, cfg.d_model, cfg.vocab_size,
+                                              cfg.param_dtype)
+        return params
+
+    @staticmethod
+    def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array):
+        B, S = tokens.shape
+        positions = jnp.arange(S)
+        x = L.embed(cfg, params["embed"], tokens)
+        aux_total = jnp.float32(0)
+        for lp in params.get("dense_layers", []):
+            x, _, _ = moe_layer_fwd(cfg, lp, x, positions, dense_ffn=True)
+
+        def body(carry, lp):
+            x, aux = carry
+            y, _, a = moe_layer_fwd(cfg, lp, x, positions)
+            return (y, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            L.remat_wrap(cfg, body), (x, aux_total), params["layers"])
+        return L.apply_norm(cfg, params["final_norm"], x), aux_total
+
+    @staticmethod
+    def loss(cfg: ModelConfig, params: Dict, batch: Dict):
+        hidden, aux = MoETransformer.forward(cfg, params, batch["tokens"])
+        logits = L.unembed(cfg, params["embed"], params.get("lm_head"), hidden)
+        xent = L.softmax_xent(logits, batch["labels"])
+        n_moe = cfg.num_layers - cfg.n_dense_layers
+        loss = xent + cfg.router_aux_weight * aux / max(n_moe, 1)
+        return loss, {"loss": loss, "xent": xent, "aux": aux}
+
+    # -- inference ----------------------------------------------------------
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+        n_scan = cfg.num_layers - cfg.n_dense_layers
+        if cfg.kv_lora_rank:
+            mk = lambda n: {
+                "c_kv": jnp.zeros((n, batch, max_len, cfg.kv_lora_rank), cfg.compute_dtype),
+                "k_rope": jnp.zeros((n, batch, max_len, cfg.qk_rope_dim), cfg.compute_dtype),
+            }
+        else:
+            S = min(max_len, cfg.window) if cfg.window else max_len
+            hd = cfg.resolved_head_dim
+            mk = lambda n: {
+                "k": jnp.zeros((n, batch, cfg.n_kv_heads, S, hd), cfg.compute_dtype),
+                "v": jnp.zeros((n, batch, cfg.n_kv_heads, S, hd), cfg.compute_dtype),
+            }
+        cache = {"scan": mk(n_scan), "len": jnp.zeros((), jnp.int32)}
+        if cfg.n_dense_layers:
+            cache["dense"] = mk(cfg.n_dense_layers)
+        return cache
+
+    @staticmethod
+    def _layer_cache_slices(cfg, cache_tree):
+        if cfg.kv_lora_rank:
+            return (cache_tree["c_kv"], cache_tree["k_rope"])
+        return (cache_tree["k"], cache_tree["v"])
+
+    @staticmethod
+    def prefill(cfg: ModelConfig, params: Dict, batch: Dict):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.arange(S)
+        x = L.embed(cfg, params["embed"], tokens)
+        dense_states = []
+        for lp in params.get("dense_layers", []):
+            x, st, _ = moe_layer_fwd(cfg, lp, x, positions, dense_ffn=True)
+            dense_states.append(st)
+
+        def body(x, lp):
+            y, st, _ = moe_layer_fwd(cfg, lp, x, positions)
+            if cfg.kv_lora_rank:
+                return y, (st["c_kv"], st["k_rope"])
+            k, v = st["k"], st["v"]
+            if cfg.window and S > cfg.window:
+                k = jnp.roll(k[:, :, -cfg.window:], shift=S % cfg.window, axis=2)
+                v = jnp.roll(v[:, :, -cfg.window:], shift=S % cfg.window, axis=2)
+            return y, (k, v)
+
+        x, (c1, c2) = jax.lax.scan(L.remat_wrap(cfg, body), x, params["layers"])
+        hidden = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+        logits = L.unembed(cfg, params["embed"], params.get("lm_head"), hidden)
+        key1, key2 = ("c_kv", "k_rope") if cfg.kv_lora_rank else ("k", "v")
+        cache = {"scan": {key1: c1, key2: c2}, "len": jnp.asarray(S, jnp.int32)}
+        if dense_states:
+            cache["dense"] = {
+                key1: jnp.stack([st[key1 if cfg.kv_lora_rank else "k"] for st in dense_states]),
+                key2: jnp.stack([st[key2 if cfg.kv_lora_rank else "v"] for st in dense_states]),
+            }
+        return logits, cache
+
+    @staticmethod
+    def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, batch: Dict):
+        tokens = batch["tokens"]
+        B, S1 = tokens.shape
+        cur = cache["len"]
+        positions = cur + jnp.arange(S1)
+        x = L.embed(cfg, params["embed"], tokens)
+        new_dense = None
+        if cfg.n_dense_layers:
+            c1s, c2s = MoETransformer._layer_cache_slices(cfg, cache["dense"])
+            outs1, outs2 = [], []
+            for i, lp in enumerate(params["dense_layers"]):
+                key1, key2 = ("c_kv", "k_rope") if cfg.kv_lora_rank else ("k", "v")
+                st = {key1: c1s[i], key2: c2s[i], "len": cur}
+                x, st, _ = moe_layer_fwd(cfg, lp, x, positions, kv_state=st,
+                                         dense_ffn=True)
+                outs1.append(st[key1]); outs2.append(st[key2])
+            new_dense = {key1: jnp.stack(outs1), key2: jnp.stack(outs2)}
+
+        c1s, c2s = MoETransformer._layer_cache_slices(cfg, cache["scan"])
+        key1, key2 = ("c_kv", "k_rope") if cfg.kv_lora_rank else ("k", "v")
+
+        def body(x, inp):
+            lp, c1, c2 = inp
+            st = {key1: c1, key2: c2, "len": cur}
+            y, st, _ = moe_layer_fwd(cfg, lp, x, positions, kv_state=st)
+            return y, (st[key1], st[key2])
+
+        x, (n1, n2) = jax.lax.scan(body, x, (params["layers"], c1s, c2s))
+        hidden = L.apply_norm(cfg, params["final_norm"], x)
+        logits = L.unembed(cfg, params["embed"], params.get("lm_head"), hidden)
+        new_cache = {"scan": {key1: n1, key2: n2}, "len": cur + S1}
+        if new_dense is not None:
+            new_cache["dense"] = new_dense
+        return logits, new_cache

@@ -1,0 +1,202 @@
+"""Dense decoder-only GQA transformer (llama3.2 / tinyllama / stablelm / nemotron).
+
+Params are stacked over layers and the stack is consumed by ``lax.scan`` so
+compile time and HLO size are depth-independent.  The same module provides the
+attention backbone reused by the MoE / hybrid / enc-dec families.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.parallel.activations import shard_acts
+from repro.models.common import ModelConfig, register
+
+
+def _stack_init(fn, key, n: int):
+    """Initialize n copies of a sub-tree and stack leaves on axis 0."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_layer(cfg: ModelConfig, key) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attn(cfg, k1),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "ffn": L.init_ffn(cfg, k2),
+    }
+
+
+def layer_fwd(cfg: ModelConfig, lp: Dict, x: jax.Array, positions,
+              kv_state=None, window=None):
+    h = L.apply_norm(cfg, lp["ln1"], x)
+    a, new_state = L.attn_block(cfg, lp["attn"], h, positions,
+                                causal=True, window=window, kv_state=kv_state)
+    if cfg.parallel_residual:
+        f = L.ffn(cfg, lp["ffn"], h)
+        x = x + a + f
+    else:
+        x = x + a
+        x = x + L.ffn(cfg, lp["ffn"], L.apply_norm(cfg, lp["ln2"], x))
+    return shard_acts(x), new_state
+
+
+@register("dense")
+class DenseTransformer:
+    """Public API: init / loss / forward / prefill / decode_step / init_cache."""
+
+    # -- params -----------------------------------------------------------
+    @staticmethod
+    def init(cfg: ModelConfig, key) -> Dict:
+        ke, kl, kh = jax.random.split(key, 3)
+        params = {
+            "embed": L.init_embed(cfg, ke),
+            "layers": _stack_init(lambda k: init_layer(cfg, k), kl, cfg.num_layers),
+            "final_norm": L.init_norm(cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.init_linear(kh, cfg.d_model, cfg.vocab_size,
+                                              cfg.param_dtype)
+        return params
+
+    # -- forward ------------------------------------------------------------
+    @staticmethod
+    def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+                positions: Optional[jax.Array] = None) -> jax.Array:
+        """tokens [B,S] -> final hidden [B,S,D]."""
+        B, S = tokens.shape
+        if positions is None:
+            positions = jnp.arange(S)
+        x = L.embed(cfg, params["embed"], tokens)
+
+        def body(x, lp):
+            y, _ = layer_fwd(cfg, lp, x, positions, window=cfg.window)
+            return y, None
+
+        x, _ = jax.lax.scan(L.remat_wrap(cfg, body), x, params["layers"])
+        return L.apply_norm(cfg, params["final_norm"], x)
+
+    @staticmethod
+    def logits(cfg: ModelConfig, params: Dict, hidden: jax.Array) -> jax.Array:
+        return L.unembed(cfg, params["embed"], params.get("lm_head"), hidden)
+
+    @staticmethod
+    def loss(cfg: ModelConfig, params: Dict, batch: Dict):
+        hidden = DenseTransformer.forward(cfg, params, batch["tokens"],
+                                          batch.get("positions"))
+        logits = DenseTransformer.logits(cfg, params, hidden)
+        loss = L.softmax_xent(logits, batch["labels"])
+        return loss, {"loss": loss}
+
+    # -- inference ------------------------------------------------------------
+    @staticmethod
+    def cache_len(cfg: ModelConfig, max_len: int) -> int:
+        return min(max_len, cfg.window) if cfg.window else max_len
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+        hd = cfg.resolved_head_dim
+        S = DenseTransformer.cache_len(cfg, max_len)
+        shape = (cfg.num_layers, batch, cfg.n_kv_heads, S, hd)
+        return {
+            "k": jnp.zeros(shape, cfg.compute_dtype),
+            "v": jnp.zeros(shape, cfg.compute_dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+
+    @staticmethod
+    def prefill(cfg: ModelConfig, params: Dict, batch: Dict):
+        """Full forward returning (last-position logits, populated cache)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = batch.get("positions")
+        pos1 = jnp.arange(S) if positions is None else None
+        x = L.embed(cfg, params["embed"], tokens)
+
+        def body(x, lp):
+            h = L.apply_norm(cfg, lp["ln1"], x)
+            a, st = L.attn_block(cfg, lp["attn"], h,
+                                 pos1 if pos1 is not None else positions,
+                                 causal=True, window=cfg.window)
+            if cfg.parallel_residual:
+                x = x + a + L.ffn(cfg, lp["ffn"], h)
+            else:
+                x = x + a
+                x = x + L.ffn(cfg, lp["ffn"], L.apply_norm(cfg, lp["ln2"], x))
+            k, v = st["k"], st["v"]
+            if cfg.window and S > cfg.window:
+                # keep last `window` positions, ring-indexed (slot = pos % window)
+                k = jnp.roll(k[:, :, -cfg.window:], shift=S % cfg.window, axis=2)
+                v = jnp.roll(v[:, :, -cfg.window:], shift=S % cfg.window, axis=2)
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(L.remat_wrap(cfg, body), x, params["layers"])
+        hidden = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+        logits = DenseTransformer.logits(cfg, params, hidden)
+        cache = {"k": ks, "v": vs, "len": jnp.asarray(S, jnp.int32)}
+        return logits, cache
+
+    @staticmethod
+    def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, batch: Dict):
+        """tokens [B,1] + cache -> (logits [B,1,V], cache)."""
+        tokens = batch["tokens"]
+        B, S1 = tokens.shape
+        cur = cache["len"]
+        positions = (cur + jnp.arange(S1))[None, :].repeat(B, 0)
+        if cfg.mrope_sections is not None:
+            positions = positions[:, None, :].repeat(3, 1)
+        x = L.embed(cfg, params["embed"], tokens)
+
+        def body(x, inp):
+            lp, ck, cv = inp
+            st = {"k": ck, "v": cv, "len": cur}
+            y, new_st = layer_fwd(cfg, lp, x, positions, kv_state=st,
+                                  window=cfg.window)
+            return y, (new_st["k"], new_st["v"])
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        hidden = L.apply_norm(cfg, params["final_norm"], x)
+        logits = DenseTransformer.logits(cfg, params, hidden)
+        return logits, {"k": ks, "v": vs, "len": cur + S1}
+
+
+@register("vlm")
+class VLMTransformer(DenseTransformer):
+    """Qwen2-VL backbone: dense GQA transformer with M-RoPE.
+
+    The vision frontend is a STUB per the assignment: ``batch`` may carry
+    precomputed patch embeddings ``vision_embeds`` [B, S_v, D] which are
+    prepended to the token embeddings; 3-D M-RoPE position ids come in
+    ``batch["positions"]`` [B, 3, S].  Text-only batches synthesize
+    positions = arange broadcast to the three streams.
+    """
+
+    @staticmethod
+    def loss(cfg: ModelConfig, params: Dict, batch: Dict):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.arange(S)[None, None, :].repeat(B, 0).repeat(3, 1)
+        x = L.embed(cfg, params["embed"], tokens)
+        if "vision_embeds" in batch:
+            x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x], axis=1)
+            sv = batch["vision_embeds"].shape[1]
+            vis_pos = jnp.arange(sv)[None, None, :].repeat(B, 0).repeat(3, 1)
+            positions = jnp.concatenate([vis_pos, positions + sv], axis=2)
+
+        def body(x, lp):
+            y, _ = layer_fwd(cfg, lp, x, positions, window=cfg.window)
+            return y, None
+
+        x, _ = jax.lax.scan(L.remat_wrap(cfg, body), x, params["layers"])
+        hidden = L.apply_norm(cfg, params["final_norm"], x)
+        logits = DenseTransformer.logits(cfg, params, hidden)
+        if "vision_embeds" in batch:
+            logits = logits[:, batch["vision_embeds"].shape[1]:]
+        return L.softmax_xent(logits, batch["labels"]), {}

@@ -1,0 +1,203 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a single *shared* attention block
+applied every ``cfg.shared_attn_period`` layers (arXiv:2411.15242).
+
+Faithfulness notes (recorded in DESIGN.md):
+* the shared block's input is ``concat([hidden, original_embedding])``
+  projected 2d -> d (Zamba's concatenation trick), then a standard
+  pre-norm GQA attention + SwiGLU MLP with ONE weight bank reused at every
+  application;
+* Zamba2's per-application LoRA deltas on the shared block are implemented
+  as small rank-r additive adapters (one per application site).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.parallel.activations import shard_acts
+from repro.models.common import ModelConfig, register
+from repro.models.transformer import _stack_init
+from repro.models.mamba2 import (
+    Mamba2LM, init_mamba_layer, mamba_layer_fwd, mamba_block_fwd)
+
+_LORA_RANK = 8
+
+
+def _segments(num_layers: int, period: int) -> List[int]:
+    """Layer counts between successive shared-block applications."""
+    sizes = []
+    done = 0
+    while done < num_layers:
+        sizes.append(min(period, num_layers - done))
+        done += sizes[-1]
+    return sizes
+
+
+def n_applications(cfg: ModelConfig) -> int:
+    return len(_segments(cfg.num_layers, cfg.shared_attn_period))
+
+
+def init_shared_block(cfg: ModelConfig, key) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    napp = n_applications(cfg)
+    hd = cfg.resolved_head_dim
+    return {
+        "in_proj": L.init_linear(k1, 2 * cfg.d_model, cfg.d_model, cfg.param_dtype),
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attn(cfg, k2),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "ffn": L.init_ffn(cfg, k3),
+        # per-application LoRA on the q projection (Zamba2's adapter trick)
+        "lora_a": (jax.random.normal(k4, (napp, cfg.d_model, _LORA_RANK), jnp.float32)
+                   * 0.01).astype(cfg.param_dtype),
+        "lora_b": jnp.zeros((napp, _LORA_RANK, cfg.n_heads * hd), cfg.param_dtype),
+    }
+
+
+def shared_block_fwd(cfg: ModelConfig, sp: Dict, x: jax.Array, x0: jax.Array,
+                     app_idx: int, positions, kv_state=None):
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", jnp.concatenate([x, x0], axis=-1),
+                   sp["in_proj"].astype(dt))
+    hn = L.apply_norm(cfg, sp["ln1"], h)
+    a, new_state = L.attn_block(cfg, sp["attn"], hn, positions,
+                                causal=True, kv_state=kv_state)
+    # LoRA delta on q-path output (additive, per application site)
+    la = sp["lora_a"][app_idx].astype(dt)
+    lb = sp["lora_b"][app_idx].astype(dt)
+    a = a + jnp.einsum("bsr,rf->bsf",
+                       jnp.einsum("bsd,dr->bsr", hn, la), lb)[..., :cfg.d_model]
+    h = h + a
+    h = h + L.ffn(cfg, sp["ffn"], L.apply_norm(cfg, sp["ln2"], h))
+    return shard_acts(x + h), new_state
+
+
+def _seg_params(layers, start: int, size: int):
+    return jax.tree_util.tree_map(lambda a: a[start:start + size], layers)
+
+
+@register("hybrid")
+class Zamba2LM:
+    @staticmethod
+    def init(cfg: ModelConfig, key) -> Dict:
+        ke, kl, ks, kh = jax.random.split(key, 4)
+        return {
+            "embed": L.init_embed(cfg, ke),
+            "layers": _stack_init(lambda k: init_mamba_layer(cfg, k), kl,
+                                  cfg.num_layers),
+            "shared": init_shared_block(cfg, ks),
+            "final_norm": L.init_norm(cfg, cfg.d_model),
+            "lm_head": L.init_linear(kh, cfg.d_model, cfg.vocab_size,
+                                     cfg.param_dtype),
+        }
+
+    @staticmethod
+    def forward(cfg: ModelConfig, params: Dict, tokens: jax.Array) -> jax.Array:
+        S = tokens.shape[1]
+        positions = jnp.arange(S)
+        x0 = L.embed(cfg, params["embed"], tokens)
+        x = x0
+
+        def body(x, lp):
+            y, _ = mamba_layer_fwd(cfg, lp, x)
+            return y, None
+
+        start = 0
+        for app, size in enumerate(_segments(cfg.num_layers, cfg.shared_attn_period)):
+            x, _ = shared_block_fwd(cfg, params["shared"], x, x0, app, positions)
+            x, _ = jax.lax.scan(L.remat_wrap(cfg, body), x,
+                                _seg_params(params["layers"], start, size))
+            start += size
+        return L.apply_norm(cfg, params["final_norm"], x)
+
+    @staticmethod
+    def loss(cfg: ModelConfig, params: Dict, batch: Dict):
+        hidden = Zamba2LM.forward(cfg, params, batch["tokens"])
+        logits = L.unembed(cfg, params["embed"], params.get("lm_head"), hidden)
+        loss = L.softmax_xent(logits, batch["labels"])
+        return loss, {"loss": loss}
+
+    # -- inference ----------------------------------------------------------
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+        cache = Mamba2LM.init_cache(cfg, batch, max_len)
+        napp = n_applications(cfg)
+        hd = cfg.resolved_head_dim
+        cache["attn_k"] = jnp.zeros((napp, batch, cfg.n_kv_heads, max_len, hd),
+                                    cfg.compute_dtype)
+        cache["attn_v"] = jnp.zeros_like(cache["attn_k"])
+        return cache
+
+    @staticmethod
+    def prefill(cfg: ModelConfig, params: Dict, batch: Dict):
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        positions = jnp.arange(S)
+        x0 = L.embed(cfg, params["embed"], tokens)
+        x = x0
+
+        def body(x, lp):
+            h = L.apply_norm(cfg, lp["ln"], x)
+            y, st = mamba_block_fwd(cfg, lp["mamba"], h)
+            return x + y, (st["ssm"], st["conv_x"], st["conv_B"], st["conv_C"])
+
+        segs = _segments(cfg.num_layers, cfg.shared_attn_period)
+        attn_k, attn_v, mb_parts = [], [], []
+        start = 0
+        for app, size in enumerate(segs):
+            x, st = shared_block_fwd(cfg, params["shared"], x, x0, app, positions)
+            attn_k.append(st["k"]); attn_v.append(st["v"])
+            x, ys = jax.lax.scan(L.remat_wrap(cfg, body), x,
+                                 _seg_params(params["layers"], start, size))
+            mb_parts.append(ys)
+            start += size
+        ssm, cx, cB, cC = (jnp.concatenate([p[i] for p in mb_parts])
+                           for i in range(4))
+        hidden = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+        logits = L.unembed(cfg, params["embed"], params.get("lm_head"), hidden)
+        cache = {"ssm": ssm, "conv_x": cx, "conv_B": cB, "conv_C": cC,
+                 "attn_k": jnp.stack(attn_k), "attn_v": jnp.stack(attn_v),
+                 "len": jnp.asarray(S, jnp.int32)}
+        return logits, cache
+
+    @staticmethod
+    def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, batch: Dict):
+        tokens = batch["tokens"]
+        B, S1 = tokens.shape
+        cur = cache["len"]
+        positions = (cur + jnp.arange(S1))[None, :].repeat(B, 0)
+        x0 = L.embed(cfg, params["embed"], tokens)
+        x = x0
+
+        def body(x, inp):
+            lp, ssm, cx, cB, cC = inp
+            st = {"ssm": ssm, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+            y, st = mamba_layer_fwd(cfg, lp, x, state=st)
+            return y, (st["ssm"], st["conv_x"], st["conv_B"], st["conv_C"])
+
+        segs = _segments(cfg.num_layers, cfg.shared_attn_period)
+        new_k, new_v, mb_parts = [], [], []
+        start = 0
+        for app, size in enumerate(segs):
+            kv = {"k": cache["attn_k"][app], "v": cache["attn_v"][app], "len": cur}
+            x, st = shared_block_fwd(cfg, params["shared"], x, x0, app,
+                                     positions, kv_state=kv)
+            new_k.append(st["k"]); new_v.append(st["v"])
+            seg_cache = tuple(
+                cache[k][start:start + size]
+                for k in ("ssm", "conv_x", "conv_B", "conv_C"))
+            x, ys = jax.lax.scan(
+                body, x, (_seg_params(params["layers"], start, size),) + seg_cache)
+            mb_parts.append(ys)
+            start += size
+        ssm, cx, cB, cC = (jnp.concatenate([p[i] for p in mb_parts])
+                           for i in range(4))
+        hidden = L.apply_norm(cfg, params["final_norm"], x)
+        logits = L.unembed(cfg, params["embed"], params.get("lm_head"), hidden)
+        return logits, {"ssm": ssm, "conv_x": cx, "conv_B": cB, "conv_C": cC,
+                        "attn_k": jnp.stack(new_k), "attn_v": jnp.stack(new_v),
+                        "len": cur + S1}

@@ -1,0 +1,136 @@
+"""Activation sharding constraints.
+
+GSPMD left alone will happily model-shard the hidden dim of activations and
+replicate the batch (observed in the first dry-run probe: local hidden
+[32, 4096, 128] instead of [2, 4096, 2048]).  The launcher declares the
+intended activation layout here; model code calls ``shard_acts`` at layer
+boundaries.  No-op when unset (unit tests, single device).
+
+Layout convention for [B, S, D] activations:
+  dim 0 (batch)     -> dp entry ("data" or ("pod","data"))
+  dim 1 (sequence)  -> sp entry (sequence parallelism, optional hillclimb)
+  dim 2 (hidden)    -> None (materialized fully per shard between matmuls)
+Logits [B, S, V] additionally shard V over tp (set by ``shard_logits``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"dp": None, "dp_size": 1, "sp": None, "sp_size": 1,
+          "tp": None, "tp_size": 1, "mesh": None, "fsdp": None}
+
+
+def set_activation_sharding(dp=None, dp_size=1, sp=None, sp_size=1,
+                            tp=None, tp_size=1, mesh=None, fsdp=None) -> None:
+    _STATE.update(dp=dp, dp_size=dp_size, sp=sp, sp_size=sp_size,
+                  tp=tp, tp_size=tp_size, mesh=mesh, fsdp=fsdp)
+
+
+def clear() -> None:
+    set_activation_sharding()
+
+
+def _entry(name, dim_size):
+    e, size = _STATE[name], _STATE[name + "_size"]
+    if e is None or size <= 1 or dim_size % size != 0:
+        return None
+    return e
+
+
+def shard_embed_out(x: jax.Array) -> jax.Array:
+    """Stage the vocab-sharded-gather output towards the activation layout.
+
+    The gather over a tp-sharded table comes out d-sharded; jumping straight
+    to batch-sharded triggers GSPMD's "involuntary full rematerialization"
+    (replicate-then-slice).  Constraining to (dp, None, tp) first makes the
+    transition a local slice, and the following shard_acts an ordinary
+    all-gather over tp."""
+    if _STATE["dp"] is None or x.ndim != 3:
+        return x
+    spec = [_entry("dp", x.shape[0]), None, _entry("tp", x.shape[2])]
+    if any(s is not None for s in spec):
+        x = jax.lax.with_sharding_constraint(x, P(*spec))
+    return shard_acts(x)
+
+
+def shard_acts(x: jax.Array) -> jax.Array:
+    """Constrain [B, ...] activations: batch over dp, seq over sp."""
+    if _STATE["dp"] is None or x.ndim < 2:
+        return x
+    spec = [_entry("dp", x.shape[0])]
+    if x.ndim >= 3:
+        spec.append(_entry("sp", x.shape[1]))
+        spec.extend([None] * (x.ndim - 2))
+    else:
+        spec.append(None)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_attn_qkv(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Attention-interior sharding ([B, H, S, D] each).
+
+    GSPMD left alone splits *within* heads when H doesn't divide tp (e.g.
+    llama3.2's 24 q-heads on a 16-way model axis -> g=2 partial-softmax
+    all-reduces per kv block, ~360 GB/step/chip at 4k).  Rule:
+      * both Hq and Hkv divide tp -> shard heads over tp (classic TP);
+      * otherwise shard the *sequence* over tp (context parallelism inside
+        the layer; boundary reshards are cheap all-to-alls).
+    """
+    if _STATE["dp"] is None or q.ndim != 4:
+        return q, k, v
+    tp, tps = _STATE["tp"], _STATE["tp_size"]
+    dp = _entry("dp", q.shape[0])
+    if tp is None or tps <= 1:
+        return q, k, v
+    heads_ok = (q.shape[1] % tps == 0) and (k.shape[1] % tps == 0)
+    seq_ok = (q.shape[2] % tps == 0) and (k.shape[2] % tps == 0)
+    if heads_ok:
+        spec_q = P(dp, tp, None, None)
+        spec_kv = P(dp, tp, None, None)
+    elif seq_ok:
+        spec_q = P(dp, None, tp, None)
+        spec_kv = P(dp, None, tp, None)
+    else:
+        return q, k, v
+    q = jax.lax.with_sharding_constraint(q, spec_q)
+    k = jax.lax.with_sharding_constraint(k, spec_kv)
+    v = jax.lax.with_sharding_constraint(v, spec_kv)
+    return q, k, v
+
+
+def bh_flat_entry(b: int, h: int):
+    """Joint (batch*heads) sharding over dp×tp for the flattened-attention
+    layout; None when the product doesn't divide."""
+    if _STATE["dp"] is None:
+        return None
+    dp, tp = _STATE["dp"], _STATE["tp"]
+    total = _STATE["dp_size"] * _STATE["tp_size"]
+    if tp is None or total <= 1 or (b * h) % total != 0:
+        return None
+    axes = (dp if isinstance(dp, tuple) else (dp,)) + (tp,)
+    return axes
+
+
+def shard_bh(x: jax.Array) -> jax.Array:
+    """x: [B*H, 1, S, D] — constrain dim0 over dp×tp."""
+    entry = bh_flat_entry(x.shape[0], 1)
+    if entry is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(entry, *([None] * (x.ndim - 1))))
+
+
+def shard_logits(x: jax.Array) -> jax.Array:
+    """[B, S, V]: batch over dp, vocab over tp."""
+    if _STATE["dp"] is None or x.ndim != 3:
+        return x
+    spec = [_entry("dp", x.shape[0]), _entry("sp", x.shape[1]),
+            _entry("tp", x.shape[2])]
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,210 @@
+"""Sharding rules for every model family, with divisibility fallbacks.
+
+The policy maps param-tree leaf *names* to logical roles and assigns mesh
+axes per role:
+
+* ``tp``   ("model")          — tensor-parallel dim (heads / ffn / vocab / experts-f)
+* ``fsdp`` ("data", optional) — ZeRO-3 style parameter sharding; all-gathered
+  per layer inside the scan, gradients reduce-scattered back
+* ``dp``   ("data" [+ "pod"]) — batch dim of activations / caches
+
+Every assignment checks divisibility; a dim that does not divide its axis
+size falls back to the next candidate (or replication).  This is what lets
+one rule-set cover kv_heads ∈ {2..32}, experts ∈ {8, 64}, batch ∈ {1..256}.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Axis assignment for one launch configuration."""
+    tp_axis: str = "model"
+    fsdp: bool = True
+    fsdp_axes: Tuple[str, ...] = ("data",)          # can be ("pod","data")
+    dp_axes: Tuple[str, ...] = ("data",)            # ("pod","data") multi-pod
+
+    def fsdp_entry(self):
+        if not self.fsdp:
+            return None
+        return self.fsdp_axes if len(self.fsdp_axes) > 1 else self.fsdp_axes[0]
+
+    def dp_entry(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+
+def _axsize(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in entry]))
+    return mesh.shape[entry]
+
+
+def _fit(mesh: Mesh, shape: Tuple[int, ...], wants: Sequence[Any]) -> P:
+    """Build a PartitionSpec keeping only divisible assignments, never using
+    one mesh axis twice."""
+    used = set()
+    out = []
+    for dim, cand in zip(shape, wants):
+        picked = None
+        for entry in (cand if isinstance(cand, list) else [cand]):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+            if any(a in used for a in axes):
+                continue
+            if dim % _axsize(mesh, entry) == 0 and _axsize(mesh, entry) > 1:
+                picked = entry
+                used.update(axes)
+                break
+        out.append(picked)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+# name -> (expected trailing ndim, wants builder)
+def _param_rules(pol: ShardingPolicy):
+    tp, fs = pol.tp_axis, pol.fsdp_entry()
+    return {
+        # [in, out(tp)]
+        "wq": (2, [fs, tp]), "wk": (2, [fs, tp]), "wv": (2, [fs, tp]),
+        "w_gate": (2, [fs, tp]), "w_up": (2, [fs, tp]),
+        "w_z": (2, [fs, tp]), "w_x": (2, [fs, tp]),
+        "in_proj": (2, [fs, tp]),
+        "lm_head": (2, [fs, tp]),
+        # [in(tp), out]
+        "wo": (2, [tp, fs]), "w_down": (2, [tp, fs]), "w_out": (2, [tp, fs]),
+        # embeddings: vocab on tp (row-parallel gather + AR)
+        "tok": (2, [tp, fs]),
+        "pos_embed": (2, [None, fs]),
+        # small projections
+        "w_B": (2, [fs, None]), "w_C": (2, [fs, None]), "w_dt": (2, [fs, None]),
+        "w_dkv": (2, [fs, None]),
+        "w_uk": (2, [None, tp]), "w_uv": (2, [None, tp]),
+        "router": (2, [None, None]),
+        # conv kernels [K, channels(tp)]
+        "conv_x": (2, [None, tp]), "conv_B": (2, [None, tp]),
+        "conv_C": (2, [None, tp]),
+        # vectors
+        "scale": (1, [None]), "bias": (1, [None]),
+        "A_log": (1, [None]), "D": (1, [None]), "dt_bias": (1, [None]),
+        # zamba lora [napp, d, r] / [napp, r, f]
+        "lora_a": (3, [None, fs, None]), "lora_b": (3, [None, None, tp]),
+    }
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return entry.key
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return entry.name
+    return ""
+
+
+def make_param_specs(cfg: ModelConfig, params_shapes, mesh: Mesh,
+                     pol: ShardingPolicy):
+    """params_shapes: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    rules = _param_rules(pol)
+    # expert tensors [E, d, f]: detected via 3-D named w_gate/w_up/w_down
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        if name not in rules:
+            return P()
+        nd, wants = rules[name]
+        extra = len(shape) - nd
+        if extra < 0:
+            return P()
+        wants_full = [None] * extra + list(wants)
+        return _fit(mesh, shape, wants_full)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shapes)
+
+
+def make_opt_specs(param_specs):
+    """AdamW state mirrors params; step is replicated."""
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def make_batch_specs(cfg: ModelConfig, batch_shapes, mesh: Mesh,
+                     pol: ShardingPolicy):
+    dp = pol.dp_entry()
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        # batch dim first everywhere; shard it over dp (fall back to nothing)
+        wants = [dp] + [None] * (len(shape) - 1)
+        return _fit(mesh, shape, wants)
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def make_cache_specs(cfg: ModelConfig, cache_shapes, mesh: Mesh,
+                     pol: ShardingPolicy):
+    """KV/state caches: [L?, B, heads?, S, ...] — batch over dp, heads over
+    tp when divisible, otherwise sequence over tp (flash-decode style); for
+    batch=1 long-context cells the sequence dim picks up dp as well."""
+    dp, tp = pol.dp_entry(), pol.tp_axis
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        if name == "len" or len(shape) == 0:
+            return P()
+        if name in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v"):
+            # [L, B, H, S, hd]
+            return _fit(mesh, shape, [None, dp, tp, [tp, dp], None])
+        if name in ("c_kv", "k_rope"):
+            # [L, B, S, r]
+            return _fit(mesh, shape, [None, dp, [tp, dp], None])
+        if name == "ssm":
+            # [L, B, H, P, N]
+            return _fit(mesh, shape, [None, dp, tp, None, None])
+        if name.startswith("conv_"):
+            # [L, B, K-1, channels]
+            return _fit(mesh, shape, [None, dp, None, tp])
+        wants = [None, dp] + [None] * (len(shape) - 2)
+        return _fit(mesh, shape, wants)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def attach(mesh: Mesh, shapes, specs):
+    """ShapeDtypeStruct tree + spec tree -> ShapeDtypeStruct tree with
+    NamedSharding attached (for .lower())."""
+    return jax.tree_util.tree_map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_with_sharding(fn, mesh, pol, cfg, *args):
+    shapes = jax.eval_shape(fn, *args)
+    specs = make_param_specs(cfg, shapes, mesh, pol)
+    return attach(mesh, shapes, specs), specs

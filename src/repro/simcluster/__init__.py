@@ -1,0 +1,3 @@
+from repro.simcluster.sim import ClusterSim, SimResult
+from repro.simcluster.workloads import (WORKLOADS, make_job, paper_job_mix,
+                                        paper_table2_jobs)

@@ -1,0 +1,266 @@
+"""Discrete-event simulator of the virtualized MapReduce cluster (paper §5).
+
+Models: physical machines hosting VMs, per-VM map/reduce slots, HDFS-style
+replicated block placement, remote-read penalty for non-local map tasks,
+heartbeats (3 s), vCPU hot-plug latency, per-task duration jitter,
+stragglers + speculative re-execution.
+
+The simulator is scheduler-agnostic: any ``SchedulerBase`` subclass plugs in.
+For ``CompletionTimeScheduler`` the per-VM map capacity follows the
+reconfigurator's live vCPU counts (Algorithm 1); baselines keep the static
+slot configuration — exactly the comparison of paper §5.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.reconfigurator import Reconfigurator
+from repro.core.scheduler import CompletionTimeScheduler, Launch, SchedulerBase
+from repro.core.types import ClusterSpec, JobRuntime, JobSpec, TaskId, TaskKind
+
+
+@dataclass
+class RunningTask:
+    task: TaskId
+    node: int
+    start: float
+    finish: float
+    local: bool
+    speculative: bool = False
+
+
+@dataclass
+class SimResult:
+    scheduler: str
+    jobs: Dict[str, JobRuntime]
+    makespan: float
+    reconfig_stats: Dict[str, float] = field(default_factory=dict)
+    speculative_launches: int = 0
+
+    # -- derived metrics ----------------------------------------------------
+    def completion_time(self, job_id: str) -> float:
+        j = self.jobs[job_id]
+        return (j.finish_time or math.inf) - j.spec.submit_time
+
+    def throughput_jobs_per_hour(self) -> float:
+        done = [j for j in self.jobs.values() if j.finish_time is not None]
+        if not done or self.makespan <= 0:
+            return 0.0
+        return len(done) * 3600.0 / self.makespan
+
+    def deadlines_met(self) -> int:
+        return sum(1 for j in self.jobs.values()
+                   if j.finish_time is not None
+                   and j.finish_time <= j.absolute_deadline + 1e-9)
+
+    def locality_rate(self) -> float:
+        loc = sum(j.local_map_launches for j in self.jobs.values())
+        tot = loc + sum(j.remote_map_launches for j in self.jobs.values())
+        return loc / tot if tot else 0.0
+
+
+class ClusterSim:
+    def __init__(self, spec: ClusterSpec, scheduler: SchedulerBase, *,
+                 seed: int = 0, straggler_prob: float = 0.03,
+                 straggler_factor: float = 3.0, speculative: bool = True,
+                 speculation_threshold: float = 2.0):
+        self.spec = spec
+        self.sched = scheduler
+        self.rng = random.Random(seed)
+        self.straggler_prob = straggler_prob
+        self.straggler_factor = straggler_factor
+        self.speculative = speculative
+        self.spec_threshold = speculation_threshold
+
+        n = spec.num_nodes
+        self.map_running: List[List[RunningTask]] = [[] for _ in range(n)]
+        self.red_running: List[List[RunningTask]] = [[] for _ in range(n)]
+        self.live: Dict[Tuple[TaskId, bool], RunningTask] = {}
+        self.finished_tasks: set = set()
+        self.spec_launched: set = set()
+        self.n_speculative = 0
+        self.events: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self.reconfig: Optional[Reconfigurator] = getattr(
+            scheduler, "reconfig", None) if scheduler.uses_reconfig else None
+        if self.reconfig is not None:
+            self.reconfig.validator = lambda vm: self.free_map(vm) > 0
+
+    # -- capacities ----------------------------------------------------------
+    def map_capacity(self, node: int) -> int:
+        if self.reconfig is not None:
+            return self.reconfig.vcpus[node]
+        return self.spec.base_map_slots
+
+    def free_map(self, node: int) -> int:
+        return self.map_capacity(node) - len(self.map_running[node])
+
+    def free_reduce(self, node: int) -> int:
+        return self.spec.base_reduce_slots - len(self.red_running[node])
+
+    # -- event machinery ----------------------------------------------------
+    def _push(self, t: float, kind: str, data=None) -> None:
+        self._seq += 1
+        heapq.heappush(self.events, (t, self._seq, kind, data))
+
+    # -- duration model -------------------------------------------------------
+    def _jitter(self, cv: float) -> float:
+        if cv <= 0:
+            return 1.0
+        sigma = math.sqrt(math.log(1 + cv * cv))
+        return self.rng.lognormvariate(-sigma * sigma / 2, sigma)
+
+    def task_duration(self, job: JobRuntime, task: TaskId, local: bool) -> float:
+        prof = job.spec.profile
+        if task.kind == TaskKind.MAP:
+            base = prof.map_time
+            if not local:
+                base *= 1.0 + prof.remote_penalty
+        else:
+            # reduce = copy (one stream per mapper) + sort/reduce compute
+            base = prof.reduce_time + job.spec.u_m * prof.shuffle_time_per_pair
+        d = base * self._jitter(prof.time_cv)
+        if self.rng.random() < self.straggler_prob:
+            d *= self.straggler_factor
+        return d
+
+    # -- main loop --------------------------------------------------------------
+    def run(self, jobs: List[JobSpec], until: float = 10_000_000.0) -> SimResult:
+        for job in jobs:
+            self._push(job.submit_time, "submit", job)
+        for node in range(self.spec.num_nodes):
+            self._push(self.spec.heartbeat_interval * (1 + node / self.spec.num_nodes),
+                       "heartbeat", node)
+        now = 0.0
+        while self.events:
+            now, _, kind, data = heapq.heappop(self.events)
+            if now > until:
+                break
+            if kind == "submit":
+                self.sched.job_added(data, now)
+            elif kind == "finish":
+                self._on_finish(data, now)
+            elif kind == "plug":
+                self._on_plug_ready(now)
+            elif kind == "heartbeat":
+                node = data
+                self._heartbeat(node, now)
+                if any(not j.finished for j in self.sched.jobs.values()) or \
+                        not self.sched.jobs:
+                    self._push(now + self.spec.heartbeat_interval, "heartbeat",
+                               node)
+        result = SimResult(
+            scheduler=self.sched.name,
+            jobs=self.sched.jobs,
+            makespan=max((j.finish_time or now) for j in self.sched.jobs.values())
+            if self.sched.jobs else 0.0,
+            reconfig_stats=dict(self.reconfig.stats) if self.reconfig else {},
+            speculative_launches=self.n_speculative,
+        )
+        return result
+
+    # -- handlers -------------------------------------------------------------
+    def _launch(self, launch: Launch, now: float, speculative: bool = False) -> None:
+        job = self.sched.jobs[launch.task.job_id]
+        dur = self.task_duration(job, launch.task, launch.local)
+        rt = RunningTask(launch.task, launch.node, now, now + dur,
+                         launch.local, speculative)
+        if launch.task.kind == TaskKind.MAP:
+            self.map_running[launch.node].append(rt)
+        else:
+            self.red_running[launch.node].append(rt)
+        self.live[(launch.task, speculative)] = rt
+        self._push(rt.finish, "finish", rt)
+
+    def _on_finish(self, rt: RunningTask, now: float) -> None:
+        if (rt.task, rt.speculative) not in self.live:
+            return                      # cancelled duplicate
+        del self.live[(rt.task, rt.speculative)]
+        lst = (self.map_running if rt.task.kind == TaskKind.MAP
+               else self.red_running)[rt.node]
+        if rt in lst:
+            lst.remove(rt)
+        if rt.task in self.finished_tasks:
+            return
+        self.finished_tasks.add(rt.task)
+        # cancel the twin if speculation duplicated this task
+        twin_key = (rt.task, not rt.speculative)
+        if twin_key in self.live:
+            twin = self.live.pop(twin_key)
+            tl = (self.map_running if rt.task.kind == TaskKind.MAP
+                  else self.red_running)[twin.node]
+            if twin in tl:
+                tl.remove(twin)
+        self.sched.task_finished(rt.task, rt.node, now, now - rt.start)
+        # Paper §4.1: "the target system will soon have a free core, as a
+        # task finishes in one of the VMs, and a local task is not found for
+        # the VM" — on every map finish, a VM with no local pending work
+        # offers its freed core if a neighbour VM has a parked task waiting.
+        if self.reconfig is not None and rt.task.kind == TaskKind.MAP:
+            vm = rt.node
+            if (self.free_map(vm) > 0
+                    and (self.reconfig.vcpus[vm] > self.spec.base_map_slots
+                         or (isinstance(self.sched, CompletionTimeScheduler)
+                             and not self.sched.has_local_pending(vm)))):
+                self.reconfig.release_core(vm, now)
+            self._match_reconfig(now)
+
+    def _on_plug_ready(self, now: float) -> None:
+        if self.reconfig is None:
+            return
+        for plug in self.reconfig.complete_plugs(now):
+            task = plug.task
+            job = self.sched.jobs.get(task.job_id)
+            if job is None or task.index in job.completed_map:
+                continue
+            self.sched.parked_task_launched(task, plug.to_vm, now)
+            self._launch(Launch(task, plug.to_vm, local=True,
+                                via_reconfig=True), now)
+
+    def _match_reconfig(self, now: float) -> None:
+        if self.reconfig is None:
+            return
+        started = self.reconfig.match(now, donor_ok=lambda vm: self.free_map(vm) > 0)
+        for plug in started:
+            self._push(plug.ready_at, "plug", None)
+
+    def _heartbeat(self, node: int, now: float) -> None:
+        # expire stale parked tasks back to the scheduler for remote launch
+        if self.reconfig is not None:
+            for parked in self.reconfig.expire_stale(now):
+                if isinstance(self.sched, CompletionTimeScheduler):
+                    self.sched.parked_task_expired(parked.task, now)
+            self._match_reconfig(now)
+        fm, fr = self.free_map(node), self.free_reduce(node)
+        if fm > 0 or fr > 0:
+            for launch in self.sched.select(node, fm, fr, now):
+                self._launch(launch, now)
+            self._match_reconfig(now)   # pair fresh AQ entries immediately
+        if self.speculative:
+            self._maybe_speculate(node, now)
+
+    def _maybe_speculate(self, node: int, now: float) -> None:
+        """Hadoop-style speculative re-execution of straggling maps."""
+        if self.free_map(node) <= 0:
+            return
+        for job in self.sched.jobs.values():
+            if job.finished or not job.map_durations:
+                continue
+            mean = sum(job.map_durations) / len(job.map_durations)
+            for idx, vnode in list(job.running_map.items()):
+                task = TaskId(job.spec.job_id, TaskKind.MAP, idx)
+                key = (task, False)
+                if key not in self.live or task in self.spec_launched:
+                    continue
+                rt = self.live[key]
+                if now - rt.start > self.spec_threshold * mean:
+                    self.spec_launched.add(task)
+                    self.n_speculative += 1
+                    local = node in job.spec.block_placement[idx]
+                    self._launch(Launch(task, node, local=local), now,
+                                 speculative=True)
+                    return

@@ -1,0 +1,26 @@
+"""Distributed train-step parity (subprocess with 8 fake CPU devices)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "deepseek-v2-lite-16b",
+                                  "mamba2-1.3b", "zamba2-1.2b"])
+def test_train_step_parity_1_vs_8_devices(arch):
+    """FSDP + TP + activation constraints + shard_map MoE must reproduce the
+    single-device loss to fp32-accumulation tolerance."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "distributed_parity_main.py"),
+         arch],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-1500:])
+    assert "PARITY OK" in out.stdout

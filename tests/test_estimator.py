@@ -1,0 +1,116 @@
+"""Resource-estimation model (paper Eqs. 1-10): exact + property tests."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimator import (OnlineEstimator, completion_time,
+                                  mean_task_length, min_slots)
+from repro.core.types import JobRuntime, JobSpec, WorkloadProfile
+
+prof = WorkloadProfile(name="t", map_time=20, reduce_time=10,
+                       shuffle_time_per_pair=0.01)
+
+
+def _job(u_m=40, v_r=10, deadline=600.0):
+    return JobRuntime(spec=JobSpec(job_id="j", profile=prof, u_m=u_m, v_r=v_r,
+                                   deadline=deadline))
+
+
+def test_mean_task_length_eq1():
+    assert mean_task_length([]) is None
+    assert mean_task_length([2.0, 4.0]) == 3.0
+
+
+def test_closed_form_matches_paper_shape():
+    # n_m/n_r must equal sqrt(A/B) (Lagrange solution structure)
+    d = min_slots(u_m=80, v_r=20, t_m=20, t_r=20, t_s=0.01, deadline=600)
+    assert d.feasible
+    ratio = d.n_m_cont / d.n_r_cont
+    assert math.isclose(ratio, math.sqrt((80 * 20) / (20 * 20)), rel_tol=1e-9)
+
+
+@given(u_m=st.integers(1, 300), v_r=st.integers(1, 100),
+       t_m=st.floats(0.5, 120), t_s=st.floats(0, 0.05),
+       slack=st.floats(1.05, 20))
+@settings(max_examples=200, deadline=None)
+def test_continuous_solution_meets_deadline_exactly(u_m, v_r, t_m, t_s, slack):
+    """At the continuous Lagrange point, Eq. 9 holds with equality."""
+    A, B = u_m * t_m, v_r * t_m
+    shuffle = u_m * v_r * t_s
+    deadline = shuffle + slack * (A + B) / max(u_m + v_r, 1)
+    d = min_slots(u_m, v_r, t_m, t_m, t_s, deadline)
+    if not d.feasible or not math.isfinite(d.n_m_cont):
+        return
+    C = deadline - shuffle
+    lhs = A / d.n_m_cont + B / d.n_r_cont
+    assert math.isclose(lhs, C, rel_tol=1e-6)
+    # integer allocation (ceil) can only be faster
+    t_int = completion_time(u_m, v_r, t_m, t_m, t_s, d.n_m, d.n_r)
+    assert t_int <= deadline * (1 + 1e-9) or d.n_m == u_m or d.n_r == v_r
+
+
+@given(u_m=st.integers(2, 200), v_r=st.integers(2, 60),
+       t_m=st.floats(1, 60), t_s=st.floats(0, 0.02))
+@settings(max_examples=100, deadline=None)
+def test_lagrange_rounding_near_integer_optimum(u_m, v_r, t_m, t_s):
+    """Eq. 10 is the *continuous* optimum; after ceil-rounding the allocation
+    must (a) meet the deadline and (b) cost at most +2 slots over the true
+    integer optimum (found by grid search)."""
+    deadline = u_m * v_r * t_s + (u_m * t_m + v_r * t_m) / 6.0
+    d = min_slots(u_m, v_r, t_m, t_m, t_s, deadline)
+    if not d.feasible:
+        return
+    assert (completion_time(u_m, v_r, t_m, t_m, t_s, d.n_m, d.n_r)
+            <= deadline * (1 + 1e-9)) or d.n_m == u_m or d.n_r == v_r
+    C = deadline - u_m * v_r * t_s
+    best = None
+    for nm in range(1, u_m + 1):
+        rem = C - (u_m * t_m) / nm
+        if rem <= 0:
+            continue
+        nr = math.ceil((v_r * t_m) / rem - 1e-12)
+        if 1 <= nr <= v_r:
+            tot = nm + nr
+            best = tot if best is None else min(best, tot)
+    if best is not None:
+        assert d.n_m + d.n_r <= best + 2, (d.n_m, d.n_r, best)
+
+
+@given(st.floats(0.1, 50))
+@settings(max_examples=50, deadline=None)
+def test_tighter_deadline_needs_more_slots(t_m):
+    loose = min_slots(50, 10, t_m, t_m, 0.001, deadline=40 * t_m)
+    tight = min_slots(50, 10, t_m, t_m, 0.001, deadline=15 * t_m)
+    assert tight.n_m >= loose.n_m
+    assert tight.n_r >= loose.n_r
+
+
+def test_infeasible_shuffle_dominates():
+    d = min_slots(100, 50, 10, 10, t_s=1.0, deadline=100.0)   # shuffle=5000s
+    assert not d.feasible
+
+
+def test_online_reestimation_raises_demand_near_deadline():
+    est = OnlineEstimator()
+    job = _job(u_m=40, v_r=10, deadline=500)
+    job.map_durations.extend([20.0] * 5)
+    job.completed_map.update(range(5))
+    early = est.demand(job, now=50.0)
+    late = est.demand(job, now=350.0)
+    assert early is not None and late is not None
+    assert late.n_m >= early.n_m
+
+
+def test_bootstrap_returns_none_without_samples():
+    est = OnlineEstimator()
+    assert est.demand(_job(), now=0.0) is None
+
+
+def test_table2_style_output():
+    """Sanity on the Table-2 benchmark path: grep 10GB @650s."""
+    d = min_slots(u_m=80, v_r=12, t_m=20.0, t_r=20.0, t_s=0.0024,
+                  deadline=650.0)
+    assert d.feasible
+    assert 1 <= d.n_m <= 80 and 1 <= d.n_r <= 12
+    assert d.n_m > d.n_r      # map-heavy job demands more map slots

@@ -1,0 +1,51 @@
+"""Elastic fleet: end-to-end multi-job run with host failure (subprocess
+with 8 fake CPU devices so the session's device count stays untouched)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_deadline_fleet_end_to_end():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / "deadline_fleet.py"),
+         "--steps", "8", "--fail-after", "3.0"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+    assert "FAILED; affected=" in out.stdout        # host failure happened
+    assert "recovered" in out.stdout                # ...and was recovered
+
+
+def test_chip_pool_aq_rq():
+    from repro.elastic import ChipPool
+
+    class FakeDev:
+        pass
+
+    pool = ChipPool([FakeDev() for _ in range(8)], chips_per_host=4)
+    got = pool.allocate("a", 6, preferred_hosts=(0,))
+    assert len(got) == 6
+    assert {pool.host_of(c) for c in got[:4]} == {0}   # locality preference
+    pool.park_grow("b", host=1)
+    pool.release([got[-1]])                            # a chip on host 1
+    grants = pool.match()
+    assert grants == [("b", got[-1])]
+    affected = pool.fail_host(0)
+    assert affected == ["a"]
+    assert all(pool.owner[c] is None for c in range(4))
+
+
+def test_estimator_bridge_monotone():
+    from repro.elastic import EstimatorBridge
+    tight = EstimatorBridge.demand(100, 1.0, 4, time_left=50.0, total_chips=64)
+    loose = EstimatorBridge.demand(100, 1.0, 4, time_left=500.0, total_chips=64)
+    assert tight > loose

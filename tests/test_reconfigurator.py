@@ -1,0 +1,69 @@
+"""Algorithm-1 AQ/RQ machinery invariants."""
+from repro.core.reconfigurator import Reconfigurator
+from repro.core.types import ClusterSpec, TaskId, TaskKind
+
+
+def _t(i):
+    return TaskId("j", TaskKind.MAP, i)
+
+
+def make():
+    spec = ClusterSpec(num_machines=4, vms_per_machine=2, base_map_slots=2,
+                       max_vcpus_per_vm=4, min_vcpus_per_vm=1,
+                       hotplug_latency=0.5)
+    return spec, Reconfigurator(spec, max_wait=10.0)
+
+
+def test_core_conservation_through_matches():
+    spec, rc = make()
+    total0 = rc.total_vcpus
+    rc.park_task(_t(0), target_vm=0, now=0.0)     # machine 0 hosts vm0, vm1
+    rc.release_core(1, now=0.0)                    # sibling offers
+    started = rc.match(0.0)
+    assert len(started) == 1
+    assert rc.total_vcpus == total0                # in-flight counted
+    done = rc.complete_plugs(1.0)
+    assert len(done) == 1
+    assert rc.total_vcpus == total0
+    assert rc.vcpus[0] == 3 and rc.vcpus[1] == 1
+
+
+def test_never_below_min_vcpus():
+    spec, rc = make()
+    rc.vcpus[1] = 1
+    rc.park_task(_t(0), 0, 0.0)
+    rc.release_core(1, 0.0)                        # at min: refuse
+    assert rc.match(0.0) == []
+
+
+def test_cross_machine_transfer_impossible():
+    spec, rc = make()
+    rc.park_task(_t(0), target_vm=0, now=0.0)      # machine 0
+    rc.release_core(2, now=0.0)                    # machine 1 donor
+    assert rc.match(0.0) == []                     # queues never pair
+
+
+def test_stale_offer_dropped_by_validator():
+    spec, rc = make()
+    rc.validator = lambda vm: False                # all offers stale
+    rc.park_task(_t(0), 0, 0.0)
+    rc.release_core(1, 0.0)
+    assert rc.match(0.0) == []
+    assert rc.rq_len(0) == 0
+
+
+def test_expiry_returns_parked_tasks():
+    spec, rc = make()
+    rc.park_task(_t(0), 0, now=0.0)
+    assert rc.expire_stale(5.0) == []
+    out = rc.expire_stale(11.0)
+    assert [p.task for p in out] == [_t(0)]
+    assert rc.stats["expired"] == 1
+
+
+def test_max_vcpus_cap():
+    spec, rc = make()
+    rc.vcpus[0] = spec.max_vcpus_per_vm
+    rc.park_task(_t(0), 0, 0.0)
+    rc.release_core(1, 0.0)
+    assert rc.match(0.0) == []                     # target saturated

@@ -1,0 +1,108 @@
+"""End-to-end simulator + scheduler behaviour (the paper's §5 evaluation)."""
+import statistics
+
+import pytest
+
+from repro.core.baselines import FairScheduler, FIFOScheduler
+from repro.core.reconfigurator import Reconfigurator
+from repro.core.scheduler import CompletionTimeScheduler
+from repro.core.types import ClusterSpec, TaskKind
+from repro.simcluster import ClusterSim, paper_job_mix, paper_table2_jobs
+from repro.simcluster.workloads import paper_cluster
+
+
+def _prop(spec):
+    s = CompletionTimeScheduler(spec, Reconfigurator(spec, max_wait=30.0))
+    s.park_depth = 4
+    return s
+
+
+@pytest.mark.parametrize("make", [
+    lambda spec: FairScheduler(spec),
+    lambda spec: FIFOScheduler(spec),
+    lambda spec: _prop(spec),
+], ids=["fair", "fifo", "proposed"])
+def test_all_jobs_finish(make):
+    spec = paper_cluster()
+    sched = make(spec)
+    res = ClusterSim(spec, sched, seed=3).run(paper_table2_jobs(spec, seed=3))
+    for j in res.jobs.values():
+        assert j.finish_time is not None
+        assert len(j.completed_map) == j.spec.u_m
+        assert len(j.completed_reduce) == j.spec.v_r
+
+
+def test_no_map_slot_oversubscription():
+    spec = paper_cluster()
+    sched = _prop(spec)
+    sim = ClusterSim(spec, sched, seed=5)
+    orig = sim._heartbeat
+
+    def checked(node, now):
+        orig(node, now)
+        for n in range(spec.num_nodes):
+            assert len(sim.map_running[n]) <= sim.map_capacity(n) + len(
+                sim.reconfig.in_flight), (n, now)
+            assert len(sim.red_running[n]) <= spec.base_reduce_slots
+
+    sim._heartbeat = checked
+    sim.run(paper_table2_jobs(spec, seed=5))
+
+
+def test_core_conservation_end_to_end():
+    spec = paper_cluster()
+    sched = _prop(spec)
+    sim = ClusterSim(spec, sched, seed=7)
+    total0 = sched.reconfig.total_vcpus
+    sim.run(paper_table2_jobs(spec, seed=7))
+    assert sched.reconfig.total_vcpus == total0
+
+
+def test_proposed_beats_fair_on_locality_and_throughput():
+    """The paper's headline: ~12% throughput gain, driven by locality."""
+    spec = paper_cluster()
+    gains, loc_f, loc_p = [], [], []
+    for seed in range(1, 7):
+        f = ClusterSim(spec, FairScheduler(spec), seed=seed).run(
+            paper_table2_jobs(spec, seed=seed))
+        p = ClusterSim(spec, _prop(spec), seed=seed).run(
+            paper_table2_jobs(spec, seed=seed))
+        gains.append(p.throughput_jobs_per_hour() / f.throughput_jobs_per_hour() - 1)
+        loc_f.append(f.locality_rate())
+        loc_p.append(p.locality_rate())
+    assert statistics.mean(loc_p) > statistics.mean(loc_f) + 0.15
+    assert statistics.mean(gains) > 0.02      # positive mean gain
+
+
+def test_deadlines_met_under_proposed():
+    spec = paper_cluster()
+    res = ClusterSim(spec, _prop(spec), seed=11).run(
+        paper_table2_jobs(spec, seed=11))
+    assert res.deadlines_met() >= 4            # at most one straggler miss
+
+
+def test_reconfigurations_happen():
+    spec = paper_cluster()
+    res = ClusterSim(spec, _prop(spec), seed=2).run(
+        paper_table2_jobs(spec, seed=2))
+    assert res.reconfig_stats["reconfigurations"] > 0
+    assert res.reconfig_stats["parked"] >= res.reconfig_stats["reconfigurations"]
+
+
+def test_fifo_respects_submission_order():
+    spec = paper_cluster()
+    sched = FIFOScheduler(spec)
+    jobs = paper_job_mix(spec, sizes_gb=(2, 4), seed=1)
+    res = ClusterSim(spec, sched, seed=1, speculative=False).run(jobs)
+    firsts = [j for j in res.jobs.values() if j.spec.submit_time == 0.0]
+    assert all(j.finish_time is not None for j in firsts)
+
+
+def test_speculative_execution_bounds_stragglers():
+    spec = paper_cluster()
+    f_on = ClusterSim(spec, FairScheduler(spec), seed=9, straggler_prob=0.15,
+                      speculative=True).run(paper_table2_jobs(spec, seed=9))
+    f_off = ClusterSim(spec, FairScheduler(spec), seed=9, straggler_prob=0.15,
+                       speculative=False).run(paper_table2_jobs(spec, seed=9))
+    assert f_on.speculative_launches > 0
+    assert f_on.makespan <= f_off.makespan * 1.05

@@ -1,0 +1,156 @@
+"""Optimizer / data / checkpoint / compression / mapreduce substrates."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_lr
+
+
+def test_adamw_descends_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, weight_decay=0.0,
+                      total_steps=200)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw_init(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(p)
+        return adamw_update(cfg, p, g, s)
+
+    for _ in range(150):
+        params, state = step(params, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1.0, clip_norm=1e-3, warmup_steps=0,
+                      weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    g = {"w": jnp.full(4, 1e6)}
+    p2, _ = adamw_update(cfg, params, g, state)
+    assert np.all(np.isfinite(np.asarray(p2["w"])))
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_lr(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] < lrs[10]                       # warmup rises
+    assert abs(lrs[10] - 1.0) < 1e-6
+    assert lrs[100] == pytest.approx(0.1, rel=1e-3)
+
+
+# -- data pipeline -----------------------------------------------------------
+
+def test_data_determinism_and_locality():
+    from repro.data import DataConfig, ShardedDataset, make_batch_iter
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=4,
+                     num_shards=8, seed=7)
+    ds1 = ShardedDataset(cfg, num_hosts=4)
+    ds2 = ShardedDataset(cfg, num_hosts=4)
+    b1 = next(make_batch_iter(ds1, hosts=[0]))
+    b2 = next(make_batch_iter(ds2, hosts=[0]))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 16)
+    assert b1["tokens"].max() < 1000 and b1["tokens"].min() >= 1
+    assert ds1.locality_rate() == 1.0             # host 0 reads its own shards
+
+
+# -- checkpoint ----------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_latest():
+    from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                                  restore_checkpoint, save_checkpoint)
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "nested": {"b": np.ones(4, np.int32)}}
+    with tempfile.TemporaryDirectory() as d:
+        assert latest_step(d) is None
+        save_checkpoint(d, 3, tree)
+        save_checkpoint(d, 7, tree)
+        assert latest_step(d) == 7
+        out = restore_checkpoint(d, 7, tree)
+        np.testing.assert_array_equal(out["a"], tree["a"])
+        np.testing.assert_array_equal(out["nested"]["b"], tree["nested"]["b"])
+        # async path
+        ck = AsyncCheckpointer(d)
+        ck.save(9, tree)
+        ck.wait()
+        assert latest_step(d) == 9
+
+
+def test_checkpoint_incomplete_ignored():
+    from repro.checkpoint import latest_step, save_checkpoint
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"x": np.zeros(2)})
+        os.makedirs(os.path.join(d, "step_5"))      # torn checkpoint, no manifest
+        assert latest_step(d) == 1
+
+
+# -- compression -----------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_quantization_error_bound(seed):
+    from repro.parallel.compression import (_blockify, dequantize_int8,
+                                            quantize_int8)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (533,)) * 3.0
+    q, s = quantize_int8(x)
+    _, shape, pad = _blockify(x)
+    deq = dequantize_int8(q, s, shape, pad)
+    err = np.max(np.abs(np.asarray(deq) - np.asarray(x)))
+    bound = float(np.max(np.abs(np.asarray(x)))) / 127.0 * 0.5 + 1e-6
+    assert err <= bound * 1.01
+
+
+def test_error_feedback_recovers_mean():
+    """With error feedback the time-averaged quantized signal converges to
+    the true signal (residual carries the error)."""
+    from repro.parallel.compression import _blockify, dequantize_int8, quantize_int8
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 0.01
+    residual = jnp.zeros_like(x)
+    acc = jnp.zeros_like(x)
+    steps = 50
+    for _ in range(steps):
+        xc = x + residual
+        q, s = quantize_int8(xc)
+        _, shape, pad = _blockify(xc)
+        deq = dequantize_int8(q, s, shape, pad)
+        residual = xc - deq
+        acc = acc + deq
+    np.testing.assert_allclose(np.asarray(acc / steps), np.asarray(x),
+                               atol=5e-4)
+
+
+def test_wire_ratio():
+    from repro.parallel.compression import wire_bytes_ratio
+    assert wire_bytes_ratio() < 0.27
+
+
+# -- mapreduce engine -------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", ["wordcount", "grep", "sort",
+                                      "permutation", "inverted_index"])
+def test_mapreduce_matches_numpy_oracle(workload):
+    from repro.mapreduce import MRJob, run_mapreduce, WORKLOAD_FNS
+    from repro.mapreduce.engine import make_blocks, VOCAB
+    job = MRJob(workload=workload, n_blocks=6, block_tokens=512, n_reducers=4)
+    blocks = make_blocks(job)
+    out = run_mapreduce(job, blocks)
+    if workload == "wordcount":
+        ref = np.bincount(blocks.reshape(-1), minlength=VOCAB).reshape(4, -1)
+        np.testing.assert_array_equal(out, ref)
+    elif workload == "grep":
+        assert out.sum() == (blocks == 7).sum()
+    elif workload == "inverted_index":
+        ref = sum((np.bincount(b, minlength=VOCAB) > 0).astype(np.int32)
+                  for b in blocks).reshape(4, -1)
+        np.testing.assert_array_equal(out, ref)
+    else:
+        assert out.sum() > 0
+        assert out.shape[0] == 4
