@@ -145,6 +145,10 @@ def _group_size(text: str, default: int = 1) -> int:
     return default
 
 
+_DOT_OPERAND_RE = re.compile(
+    r"(?:(\w+\[[\d,]*\](?:\{[\d,]*\})?)\s+)?%([\w\.\-]+)")
+
+
 def _dot_flops(op: HloOp, comp: HloComputation) -> float:
     """2 * prod(out_dims) * prod(contracting dims of lhs)."""
     out = _shape_dims(op.text.split(" dot(")[0])
@@ -154,12 +158,18 @@ def _dot_flops(op: HloOp, comp: HloComputation) -> float:
     m = re.search(r"dot\(([^)]*)\)", op.text)
     if not m:
         return 0.0
-    operands = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+    # operands are either bare names ("%a, %b", older dumps) or typed
+    # ("f32[128,256]{1,0} %a, ...", newer dumps) — handle both
+    operands = _DOT_OPERAND_RE.findall(m.group(1))
     cm = _CONTRACT_RE.search(op.text)
     if not operands or cm is None:
         return 0.0
-    lhs_type = comp.types.get(operands[0], "")
-    lhs = _shape_dims(lhs_type.split("=")[0] if "=" in lhs_type else lhs_type)
+    lhs_inline_type, lhs_name = operands[0]
+    lhs = _shape_dims(lhs_inline_type) if lhs_inline_type else None
+    if lhs is None:
+        lhs_type = comp.types.get(lhs_name, "")
+        lhs = _shape_dims(lhs_type.split("=")[0]
+                          if "=" in lhs_type else lhs_type)
     if lhs is None:
         # operand may be a parameter: search type in its defining text anyway
         return 0.0
@@ -174,11 +184,59 @@ def _dot_flops(op: HloOp, comp: HloComputation) -> float:
     return 2.0 * n_out * kprod
 
 
+_CONST_RE = re.compile(r"^\s*s\d+\[\]\s+constant\((\d+)\)")
+_CMP_LT_RE = re.compile(
+    r"compare\([^)]*%([\w\.\-]+)\s*\)\s*,\s*direction=LT")
+
+
+def _infer_trip_count(cond: Optional[HloComputation]) -> Optional[int]:
+    """Bound a counted loop from its condition when XLA omitted
+    ``known_trip_count``: a root ``compare(induction, constant), LT`` with a
+    0-based unit-step induction variable (what jax.lax.scan lowers to) trips
+    exactly ``constant`` times."""
+    if cond is None:
+        return None
+    for op in cond.ops:
+        # compound conditions (early-exit loops) are not counted loops
+        if " and(" in op.text or " or(" in op.text:
+            return None
+    for op in cond.ops:
+        txt = op.text
+        if " compare(" not in txt or "direction=LT" not in txt:
+            continue
+        m = _CMP_LT_RE.search(txt)
+        if not m:
+            continue
+        bound_op = cond.types.get(m.group(1), "")
+        cm = _CONST_RE.match(bound_op)
+        if cm:
+            return int(cm.group(1))
+    return None
+
+
 def analyze_hlo(text: str) -> HloSummary:
     comps, entry = parse_computations(text)
     s = HloSummary()
     if entry is None:
         return s
+
+    # resolve trip counts once per while op (annotation, else inferred from
+    # the loop condition); unknown loops are counted here exactly once
+    trips: Dict[int, int] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            if " while(" not in op.text:
+                continue
+            tm = _TRIP_RE.search(op.text)
+            if tm is not None:
+                trips[id(op)] = int(tm.group(1))
+                continue
+            cm0 = _COND_RE.search(op.text)
+            inferred = _infer_trip_count(
+                comps.get(cm0.group(1)) if cm0 else None)
+            if inferred is None:
+                s.unknown_trip_loops += 1
+            trips[id(op)] = inferred if inferred is not None else 1
 
     # multipliers via BFS from entry
     mult: Dict[str, float] = defaultdict(float)
@@ -193,10 +251,7 @@ def analyze_hlo(text: str) -> HloSummary:
             for op in comp.ops:
                 if " while(" in op.text:
                     bm = _BODY_RE.search(op.text)
-                    tm = _TRIP_RE.search(op.text)
-                    trip = int(tm.group(1)) if tm else 1
-                    if tm is None:
-                        s.unknown_trip_loops += 1
+                    trip = trips[id(op)]
                     if bm:
                         tgt = bm.group(1)
                         val = m0 * trip

@@ -18,12 +18,21 @@ A parked task that waits longer than ``max_wait`` is handed back to the
 scheduler for a remote launch — the paper observes this wait is negligible
 ("tasks ... finish in less than a minute"), but an implementation must bound
 it to protect deadlines.
+
+Scaling note: ``match`` visits only machines whose AQ *and* RQ are both
+non-empty (tracked incrementally, ascending machine order — identical
+matching order to a full 0..M-1 sweep), and ``expire_stale`` keeps a global
+min-heap on park time so the common no-expiry heartbeat costs O(1) instead
+of scanning every machine's queue.  Both are pure-performance changes; the
+queue semantics are pinned by the parity test against
+``repro.simcluster._legacy``.
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
 from repro.core.types import ClusterSpec, TaskId
 
@@ -61,6 +70,14 @@ class Reconfigurator:
         self.validator: Optional[Callable[[int], bool]] = None
         self.stats = {"reconfigurations": 0, "parked": 0, "expired": 0,
                       "total_wait": 0.0}
+        # machines with a non-empty AQ / RQ, so match() touches only
+        # machines that can possibly pair instead of sweeping all of them
+        self._aq_nonempty: Set[int] = set()
+        self._rq_nonempty: Set[int] = set()
+        # (parked_at, seq, machine, entry) min-heap; entries are lazy — a
+        # task already matched/cancelled fails the identity check on pop
+        self._park_heap: List[Tuple[float, int, int, ParkedTask]] = []
+        self._park_seq = 0
 
     def _valid_donor(self, vm: int) -> bool:
         if self.vcpus[vm] <= self.spec.min_vcpus_per_vm:
@@ -79,21 +96,32 @@ class Reconfigurator:
 
     def park_task(self, task: TaskId, target_vm: int, now: float) -> None:
         """AQ entry: task waits for a core on target_vm's machine."""
-        self.aq[self.spec.machine_of(target_vm)].append(
-            ParkedTask(task, target_vm, now))
+        m = self.spec.machine_of(target_vm)
+        entry = ParkedTask(task, target_vm, now)
+        self.aq[m].append(entry)
+        self._aq_nonempty.add(m)
+        self._park_seq += 1
+        heapq.heappush(self._park_heap, (now, self._park_seq, m, entry))
         self.stats["parked"] += 1
 
     def release_core(self, vm: int, now: float) -> None:
         """RQ entry: vm offers one core (never below min_vcpus)."""
         if self.vcpus[vm] <= self.spec.min_vcpus_per_vm:
             return
-        self.rq[self.spec.machine_of(vm)].append(vm)
+        m = self.spec.machine_of(vm)
+        self.rq[m].append(vm)
+        self._rq_nonempty.add(m)
+
+    def _aq_sync(self, m: int) -> None:
+        if not self.aq[m]:
+            self._aq_nonempty.discard(m)
 
     def cancel_parked(self, task: TaskId) -> bool:
-        for q in self.aq:
+        for m, q in enumerate(self.aq):
             for item in list(q):
                 if item.task == task:
                     q.remove(item)
+                    self._aq_sync(m)
                     return True
         return False
 
@@ -104,7 +132,7 @@ class Reconfigurator:
         ``donor_ok(vm)`` lets the caller veto donors whose offered core got
         re-occupied between the offer and the match."""
         started = []
-        for m in range(self.spec.num_machines):
+        for m in sorted(self._aq_nonempty & self._rq_nonempty):
             while self.aq[m] and self.rq[m]:
                 parked = self.aq[m].popleft()
                 donor = None
@@ -130,6 +158,9 @@ class Reconfigurator:
                 started.append(plug)
                 self.stats["reconfigurations"] += 1
                 self.stats["total_wait"] += now - parked.parked_at
+            self._aq_sync(m)
+            if not self.rq[m]:
+                self._rq_nonempty.discard(m)
         return started
 
     def complete_plugs(self, now: float) -> List[PendingPlug]:
@@ -141,14 +172,25 @@ class Reconfigurator:
         return done
 
     def expire_stale(self, now: float) -> List[ParkedTask]:
-        """Parked tasks past max_wait -> hand back for remote launch."""
+        """Parked tasks past max_wait -> hand back for remote launch.
+
+        The park-time heap makes the common "nothing expired" case O(1);
+        popped entries whose task already left its AQ (matched / cancelled)
+        are discarded."""
         out = []
-        for q in self.aq:
-            for item in list(q):
-                if now - item.parked_at > self.max_wait:
-                    q.remove(item)
-                    out.append(item)
-                    self.stats["expired"] += 1
+        heap = self._park_heap
+        # NB: `now - parked_at > max_wait` is the seed's exact expression;
+        # rewriting it as `parked_at < now - max_wait` is NOT float-identical
+        # at the boundary and breaks decision parity.
+        while heap and now - heap[0][0] > self.max_wait:
+            parked_at, _, m, item = heapq.heappop(heap)
+            q = self.aq[m]
+            if not any(it is item for it in q):
+                continue            # already matched or cancelled
+            q.remove(item)
+            self._aq_sync(m)
+            out.append(item)
+            self.stats["expired"] += 1
         return out
 
     def next_event_time(self) -> Optional[float]:

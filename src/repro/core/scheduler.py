@@ -14,10 +14,21 @@ Policy, exactly as the paper states it:
   non-local candidate is parked for VM reconfiguration on a node that holds
   its data (Algorithm 1): AQ entry on the data node's machine, RQ entry on
   the heartbeating node's machine.
+
+Implementation note — incremental indices.  Per-heartbeat work is
+O(active work at this node), not O(jobs × tasks): the per-job pending sets
+and the per-node ``node -> pending local map ids`` inverted index live on
+``JobRuntime`` (see ``core/types.py``); this module adds the cross-job
+aggregates (per-node local-pending counters, maintained EDF order, global
+pending-work counters, per-job parked counts).  Decision order is identical
+to the seed implementation — pinned by ``tests/test_parity.py`` against the
+frozen engine in ``repro.simcluster._legacy``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import bisect
+import heapq
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.estimator import OnlineEstimator
@@ -36,7 +47,18 @@ class Launch:
 
 
 class SchedulerBase:
-    """Common bookkeeping shared by all scheduler policies."""
+    """Common bookkeeping shared by all scheduler policies.
+
+    Maintains, incrementally across task lifecycle transitions:
+
+    * ``active`` — unfinished jobs in submission order (dict removal keeps
+      ``active_jobs()`` O(active), not O(all jobs ever));
+    * ``local_pending_count[node]`` — how many (job, map task) pending pairs
+      have a replica on ``node``, so ``has_local_pending`` is O(1);
+    * ``total_pending_maps`` / ``ready_pending_reduces`` — global counters
+      that let ``select`` return immediately when the offered slots cannot
+      possibly be used (idle-heartbeat churn fix).
+    """
 
     name = "base"
     uses_reconfig = False
@@ -45,12 +67,26 @@ class SchedulerBase:
         self.spec = spec
         self.jobs: Dict[str, JobRuntime] = {}
         self.order: List[str] = []          # submission order
+        self.active: Dict[str, JobRuntime] = {}   # insertion == submission
+        # active jobs that have no completed or running task yet (paper
+        # Algorithm 2 bootstrap precedence), in submission order
+        self.bootstrap: Dict[str, JobRuntime] = {}
+        self.local_pending_count: List[int] = [0] * spec.num_nodes
+        self.total_pending_maps = 0
+        self.ready_pending_reduces = 0
 
     # -- lifecycle ----------------------------------------------------------
     def job_added(self, job: JobSpec, now: float) -> None:
-        rt = JobRuntime(spec=job)
+        rt = JobRuntime(spec=job, seq=len(self.order))
         self.jobs[job.job_id] = rt
         self.order.append(job.job_id)
+        self.active[job.job_id] = rt
+        self.bootstrap[job.job_id] = rt
+        self.total_pending_maps += job.u_m
+        counts = self.local_pending_count
+        for placement in job.block_placement[:job.u_m]:
+            for node in set(placement):
+                counts[node] += 1
         self.on_job_added(rt, now)
 
     def on_job_added(self, job: JobRuntime, now: float) -> None:
@@ -59,47 +95,100 @@ class SchedulerBase:
     def task_started(self, task: TaskId, node: int, now: float) -> None:
         job = self.jobs[task.job_id]
         if task.kind == TaskKind.MAP:
-            job.running_map[task.index] = node
+            self._start_map(job, task.index, node)
         else:
-            job.running_reduce[task.index] = node
+            self._start_reduce(job, task.index, node)
 
     def task_finished(self, task: TaskId, node: int, now: float,
                       duration: float) -> None:
         job = self.jobs[task.job_id]
         if task.kind == TaskKind.MAP:
             job.running_map.pop(task.index, None)
+            self._drop_pending_map(job, task.index)   # defensive: no-op if started
             job.completed_map.add(task.index)
             job.map_durations.append(duration)
+            job.map_duration_sum += duration
+            if not job.map_done and job.map_finished:
+                job.map_done = True
+                # reduces become schedulable the moment the map phase ends
+                self.ready_pending_reduces += len(job.pending_reduce)
         else:
             job.running_reduce.pop(task.index, None)
+            if task.index in job.pending_reduce:      # defensive
+                job.pending_reduce.discard(task.index)
+                if job.map_done:
+                    self.ready_pending_reduces -= 1
             job.completed_reduce.add(task.index)
             job.reduce_durations.append(duration)
-        if job.finished and job.finish_time is None:
-            job.finish_time = now
+            job.reduce_duration_sum += duration
+        if not job.all_done and job.finished:
+            job.all_done = True
+            if job.finish_time is None:
+                job.finish_time = now
+            self.active.pop(job.spec.job_id, None)
+            self._job_deactivated(job)
         self.on_task_finished(job, task, now)
+
+    def _job_deactivated(self, job: JobRuntime) -> None:
+        pass
 
     def on_task_finished(self, job: JobRuntime, task: TaskId, now: float) -> None:
         pass
 
+    # -- indexed transitions -------------------------------------------------
+    def _drop_pending_map(self, job: JobRuntime, idx: int) -> bool:
+        """Remove idx from the job's pending set + per-node counters."""
+        if idx not in job.pending_map:
+            return False
+        job.pending_map.discard(idx)
+        self.total_pending_maps -= 1
+        placement = job.spec.block_placement
+        if idx < len(placement):
+            counts = self.local_pending_count
+            for node in set(placement[idx]):
+                counts[node] -= 1
+        return True
+
+    def _start_map(self, job: JobRuntime, idx: int, node: int) -> None:
+        job.running_map[idx] = node
+        self._drop_pending_map(job, idx)
+        if not job.has_progress:
+            job.has_progress = True
+            self.bootstrap.pop(job.spec.job_id, None)
+
+    def _start_reduce(self, job: JobRuntime, idx: int, node: int) -> None:
+        job.running_reduce[idx] = node
+        if not job.has_progress:
+            job.has_progress = True
+            self.bootstrap.pop(job.spec.job_id, None)
+        if idx in job.pending_reduce:
+            job.pending_reduce.discard(idx)
+            if job.map_done:
+                self.ready_pending_reduces -= 1
+
     # -- helpers --------------------------------------------------------------
     def _unstarted_map_tasks(self, job: JobRuntime) -> List[int]:
-        done = job.completed_map
-        running = job.running_map
-        return [i for i in range(job.spec.u_m)
-                if i not in done and i not in running]
+        """Full unstarted list — O(pending); kept for tests/introspection.
+        Hot paths use the first_pending_* index queries instead."""
+        return sorted(job.pending_map)
 
     def _unstarted_reduce_tasks(self, job: JobRuntime) -> List[int]:
-        done = job.completed_reduce
-        running = job.running_reduce
-        return [i for i in range(job.spec.v_r)
-                if i not in done and i not in running]
+        return sorted(job.pending_reduce)
 
     def _local_map_candidates(self, job: JobRuntime, node: int) -> List[int]:
-        return [i for i in self._unstarted_map_tasks(job)
-                if node in job.spec.block_placement[i]]
+        return sorted(i for i in job.pending_map
+                      if node in job.spec.block_placement[i])
 
     def active_jobs(self) -> List[JobRuntime]:
-        return [self.jobs[j] for j in self.order if not self.jobs[j].finished]
+        return list(self.active.values())
+
+    def has_active_jobs(self) -> bool:
+        return bool(self.active)
+
+    def has_local_pending(self, vm: int) -> bool:
+        """Does any active job still have an unstarted map task whose data
+        lives on ``vm``?  O(1) via the per-node pending counters."""
+        return self.local_pending_count[vm] > 0
 
     # subclasses implement:
     def select(self, node: int, free_map: int, free_reduce: int,
@@ -119,16 +208,34 @@ class CompletionTimeScheduler(SchedulerBase):
         self.reconfig = reconfig or Reconfigurator(spec)
         self.estimator = estimator or OnlineEstimator()
         self.parked: Set[TaskId] = set()
+        self._parked_maps_per_job: Dict[str, int] = {}
         # tasks whose reconfiguration wait expired once run remotely instead
         # of re-parking (bounds per-task wait at max_wait)
         self.no_park: Set[TaskId] = set()
         # max parked tasks per target machine's AQ
         self.park_depth = 2
         self.max_slots = spec.num_nodes * spec.base_map_slots
+        # active jobs ordered by (absolute deadline, admission seq): the
+        # admission tiebreak reproduces the seed's stable sort exactly;
+        # _edf_jobs mirrors _edf with the JobRuntime objects so select
+        # iterates without rebuilding a list
+        self._edf: List[Tuple[float, int, str]] = []
+        self._edf_jobs: List[JobRuntime] = []
 
     # -- Algorithm 2 line 2 + lines 17-20 ----------------------------------
     def on_job_added(self, job: JobRuntime, now: float) -> None:
+        entry = (job.absolute_deadline, job.seq, job.spec.job_id)
+        i = bisect.bisect_left(self._edf, entry)
+        self._edf.insert(i, entry)
+        self._edf_jobs.insert(i, job)
         self._recompute_demand(job, now)
+
+    def _job_deactivated(self, job: JobRuntime) -> None:
+        entry = (job.absolute_deadline, job.seq, job.spec.job_id)
+        i = bisect.bisect_left(self._edf, entry)
+        if i < len(self._edf) and self._edf[i] == entry:
+            del self._edf[i]
+            del self._edf_jobs[i]
 
     def on_task_finished(self, job: JobRuntime, task: TaskId, now: float) -> None:
         self._recompute_demand(job, now)
@@ -140,21 +247,30 @@ class CompletionTimeScheduler(SchedulerBase):
 
     # -- scheduled counts include parked tasks ------------------------------
     def _scheduled_maps(self, job: JobRuntime) -> int:
-        parked = sum(1 for t in self.parked if t.job_id == job.spec.job_id
-                     and t.kind == TaskKind.MAP)
-        return len(job.running_map) + parked
+        return (len(job.running_map)
+                + self._parked_maps_per_job.get(job.spec.job_id, 0))
 
     # -- Algorithm 2 main loop ----------------------------------------------
     def select(self, node: int, free_map: int, free_reduce: int,
                now: float) -> List[Launch]:
+        # Nothing this node could possibly run or park -> O(1) heartbeat.
+        # The parked check keeps the remote_fill donation pass reachable: a
+        # parked task that also launched through the local path leaves an AQ
+        # entry behind with no pending work, and the seed still donates idle
+        # cores toward it.
+        if ((free_map <= 0 or (self.total_pending_maps == 0
+                               and not self.parked))
+                and (free_reduce <= 0 or self.ready_pending_reduces == 0)):
+            return []
         out: List[Launch] = []
-        jobs = self.active_jobs()
         # bootstrap jobs first (no completed or running tasks), oldest first;
-        # then EDF ascending absolute deadline
-        bootstrap = [j for j in jobs if not j.started]
-        edf = sorted((j for j in jobs if j.started),
-                     key=lambda j: j.absolute_deadline)
+        # then EDF ascending absolute deadline — both maintained
+        # incrementally, and iterated lazily so an early slot exhaustion
+        # stops the scan
+        edf_jobs = self._edf_jobs
         for phase in ("demand", "backfill", "remote_fill"):
+            if free_map <= 0 and free_reduce <= 0:
+                break       # later phases cannot launch or donate anything
             # Pass 1 "demand": Eq.-10 minimum demands, bootstrap jobs first
             #   (probe tasks), then EDF (Algorithm 2).  Non-local map
             #   candidates are parked for reconfiguration (Algorithm 1).
@@ -164,10 +280,15 @@ class CompletionTimeScheduler(SchedulerBase):
             #   non-local candidates.
             # Pass 3 "remote_fill": any core still idle takes a remote task
             #   (last resort — patient parking must never idle the cluster).
-            if phase == "demand":
-                ordered = bootstrap + edf
+            if phase == "demand" and self.bootstrap:
+                # snapshot: a bootstrap job that launches its probe task
+                # mid-phase must not be revisited in EDF position
+                ordered = (list(self.bootstrap.values())
+                           + [j for j in edf_jobs if j.has_progress])
             else:
-                ordered = sorted(jobs, key=lambda j: j.absolute_deadline)
+                # no bootstrap jobs -> every active job has progress, and
+                # the EDF list is exactly the seed's stable-sorted order
+                ordered = edf_jobs
             if phase == "remote_fill":
                 # Before burning idle cores on *remote* tasks, donate them to
                 # parked *local* tasks waiting on this machine's AQ — a local
@@ -190,8 +311,11 @@ class CompletionTimeScheduler(SchedulerBase):
                 n_r = demand.n_r if demand else 1
                 if phase != "demand":
                     n_m, n_r = job.spec.u_m, job.spec.v_r
-                if not job.map_finished:
-                    while free_map > 0 and self._scheduled_maps(job) < n_m:
+                if not job.map_done:
+                    parked_count = self._parked_maps_per_job
+                    while free_map > 0 and (
+                            len(job.running_map)
+                            + parked_count.get(job.spec.job_id, 0)) < n_m:
                         launch = self._assign_map(
                             job, node, now, allow_park=(phase != "remote_fill"))
                         if launch is None:
@@ -204,35 +328,55 @@ class CompletionTimeScheduler(SchedulerBase):
                         else:
                             out.append(launch)
                             free_map -= 1
-                            job.running_map[launch.task.index] = launch.node
+                            self._start_map(job, launch.task.index, launch.node)
                             if launch.local:
                                 job.local_map_launches += 1
                             else:
                                 job.remote_map_launches += 1
-                elif not job.finished:
-                    unstarted = self._unstarted_reduce_tasks(job)
-                    while (free_reduce > 0 and unstarted
+                elif not job.all_done:
+                    while (free_reduce > 0 and job.pending_reduce
                            and len(job.running_reduce) < n_r):
-                        idx = unstarted.pop(0)
+                        idx = job.first_pending_reduce()
                         t = TaskId(job.spec.job_id, TaskKind.REDUCE, idx)
                         out.append(Launch(t, node, local=True))
-                        job.running_reduce[idx] = node
+                        self._start_reduce(job, idx, node)
                         free_reduce -= 1
         return out
 
     # -- Algorithm 1 -----------------------------------------------------------
+    def _first_pending_not_parked(self, job: JobRuntime) -> Optional[int]:
+        """Smallest pending map index whose TaskId is not parked.  Parked
+        tasks stay pending (they may expire back), so they cannot be lazily
+        evicted from the heap — pop them aside and push back."""
+        jid = job.spec.job_id
+        if not self._parked_maps_per_job.get(jid):
+            return job.first_pending_map()   # nothing parked: plain peek
+        heap, pend = job._pending_map_heap, job.pending_map
+        skipped: List[int] = []
+        idx: Optional[int] = None
+        while heap:
+            top = heap[0]
+            if top not in pend:
+                heapq.heappop(heap)
+                continue
+            if TaskId(jid, TaskKind.MAP, top) in self.parked:
+                skipped.append(heapq.heappop(heap))
+                continue
+            idx = top
+            break
+        for s in skipped:
+            heapq.heappush(heap, s)
+        return idx
+
     def _assign_map(self, job: JobRuntime, node: int, now: float,
                     allow_park: bool = True) -> Optional[Launch]:
-        local = self._local_map_candidates(job, node)
-        if local:
-            idx = local[0]
-            return Launch(TaskId(job.spec.job_id, TaskKind.MAP, idx), node,
-                          local=True)
-        unstarted = [i for i in self._unstarted_map_tasks(job)
-                     if TaskId(job.spec.job_id, TaskKind.MAP, i) not in self.parked]
-        if not unstarted:
+        local_idx = job.first_local_pending_map(node)
+        if local_idx is not None:
+            return Launch(TaskId(job.spec.job_id, TaskKind.MAP, local_idx),
+                          node, local=True)
+        idx = self._first_pending_not_parked(job)
+        if idx is None:
             return None
-        idx = unstarted[0]
         task = TaskId(job.spec.job_id, TaskKind.MAP, idx)
         placement = job.spec.block_placement[idx]
         slack = job.absolute_deadline - now
@@ -254,27 +398,23 @@ class CompletionTimeScheduler(SchedulerBase):
         self.reconfig.park_task(task, p, now)   # AQ of machine(p)
         self.reconfig.release_core(node, now)   # RQ of machine(node)
         self.parked.add(task)
+        self._parked_maps_per_job[job.spec.job_id] = (
+            self._parked_maps_per_job.get(job.spec.job_id, 0) + 1)
         return Launch(task, p, local=True, via_reconfig=True)
 
-    def has_local_pending(self, vm: int) -> bool:
-        """Does any active job still have an unstarted map task whose data
-        lives on ``vm``?  (Used for the release-on-finish decision.)"""
-        for job in self.active_jobs():
-            if job.map_finished:
-                continue
-            for i in self._unstarted_map_tasks(job):
-                if vm in job.spec.block_placement[i]:
-                    return True
-        return False
+    def _unpark(self, task: TaskId) -> None:
+        if task in self.parked:
+            self.parked.discard(task)
+            self._parked_maps_per_job[task.job_id] -= 1
 
     # -- callbacks from the simulator for reconfig lifecycle -------------------
     def parked_task_launched(self, task: TaskId, node: int, now: float) -> None:
-        self.parked.discard(task)
+        self._unpark(task)
         job = self.jobs[task.job_id]
-        job.running_map[task.index] = node
+        self._start_map(job, task.index, node)
         job.local_map_launches += 1
         job.reconfig_map_launches += 1
 
     def parked_task_expired(self, task: TaskId, now: float) -> None:
-        self.parked.discard(task)
+        self._unpark(task)
         self.no_park.add(task)

@@ -11,6 +11,7 @@ HDFS-style block placement) in a backend-agnostic way: the same types drive
 from __future__ import annotations
 
 import enum
+import heapq
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
@@ -109,20 +110,88 @@ class JobRuntime:
 
     Tracks the paper's sets C^j (completed), R^j (running), U^j (unstarted)
     per phase, plus the observed durations that feed Eq. (1).
+
+    The U^j sets are materialized incrementally: ``pending_map`` /
+    ``pending_reduce`` hold the not-yet-started indices, and lazy min-heaps
+    plus a per-node inverted index (``node -> pending local map ids``) answer
+    "first unstarted task" and "first data-local task on this node" in
+    amortized O(1) instead of rescanning ``range(u_m)``.  An index leaves the
+    pending sets exactly once (task start); heap entries are discarded lazily
+    on peek, so every index is popped from every heap at most once over the
+    job's lifetime.
     """
 
     spec: JobSpec
+    seq: int = 0                       # admission order, set by the scheduler
     completed_map: Set[int] = field(default_factory=set)
     running_map: Dict[int, int] = field(default_factory=dict)      # task -> node
     completed_reduce: Set[int] = field(default_factory=set)
     running_reduce: Dict[int, int] = field(default_factory=dict)
     map_durations: List[float] = field(default_factory=list)
     reduce_durations: List[float] = field(default_factory=list)
+    map_duration_sum: float = 0.0
+    reduce_duration_sum: float = 0.0
     demand: Optional[SlotDemand] = None
     finish_time: Optional[float] = None
     local_map_launches: int = 0
     remote_map_launches: int = 0
     reconfig_map_launches: int = 0     # launched data-local via Algorithm 1
+    # flag mirrors of the map_finished / finished / started properties,
+    # maintained by SchedulerBase at state transitions so scheduler hot
+    # loops read a plain attribute instead of recomputing set sizes
+    map_done: bool = field(default=False, repr=False)
+    all_done: bool = field(default=False, repr=False)
+    has_progress: bool = field(default=False, repr=False)
+    pending_map: Set[int] = field(default_factory=set, repr=False)
+    pending_reduce: Set[int] = field(default_factory=set, repr=False)
+    _pending_map_heap: List[int] = field(default_factory=list, repr=False)
+    _pending_reduce_heap: List[int] = field(default_factory=list, repr=False)
+    _local_heaps: Dict[int, List[int]] = field(default_factory=dict, repr=False)
+
+    def __post_init__(self) -> None:
+        u, v = self.spec.u_m, self.spec.v_r
+        self.pending_map = set(range(u))
+        self.pending_reduce = set(range(v))
+        # ascending ranges are already valid heaps
+        self._pending_map_heap = list(range(u))
+        self._pending_reduce_heap = list(range(v))
+        self._local_heaps = {}
+        for i, placement in enumerate(self.spec.block_placement[:u]):
+            for node in set(placement):
+                self._local_heaps.setdefault(node, []).append(i)
+
+    # -- incremental-index queries (amortized O(1)) ----------------------
+    def first_pending_map(self) -> Optional[int]:
+        heap, pend = self._pending_map_heap, self.pending_map
+        while heap:
+            if heap[0] in pend:
+                return heap[0]
+            heapq.heappop(heap)
+        return None
+
+    def first_local_pending_map(self, node: int) -> Optional[int]:
+        heap = self._local_heaps.get(node)
+        if not heap:
+            return None
+        pend = self.pending_map
+        while heap:
+            if heap[0] in pend:
+                return heap[0]
+            heapq.heappop(heap)
+        return None
+
+    def first_pending_reduce(self) -> Optional[int]:
+        heap, pend = self._pending_reduce_heap, self.pending_reduce
+        while heap:
+            if heap[0] in pend:
+                return heap[0]
+            heapq.heappop(heap)
+        return None
+
+    def mean_map_duration(self) -> Optional[float]:
+        if not self.map_durations:
+            return None
+        return self.map_duration_sum / len(self.map_durations)
 
     # -- paper-set views -------------------------------------------------
     @property

@@ -1,3 +1,4 @@
 from repro.simcluster.sim import ClusterSim, SimResult
-from repro.simcluster.workloads import (WORKLOADS, make_job, paper_job_mix,
-                                        paper_table2_jobs)
+from repro.simcluster.largescale import SCENARIOS, Scenario, run_scenario
+from repro.simcluster.workloads import (WORKLOADS, make_job, paper_cluster,
+                                        paper_job_mix, paper_table2_jobs)

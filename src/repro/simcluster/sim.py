@@ -9,6 +9,24 @@ The simulator is scheduler-agnostic: any ``SchedulerBase`` subclass plugs in.
 For ``CompletionTimeScheduler`` the per-VM map capacity follows the
 reconfigurator's live vCPU counts (Algorithm 1); baselines keep the static
 slot configuration — exactly the comparison of paper §5.
+
+Engine notes (vs. the frozen seed engine in ``repro.simcluster._legacy``):
+
+* **Speculation is incremental.**  The seed rescanned every running map of
+  every job on every heartbeat.  Here each job keeps an insertion-ordered
+  run queue (same order as ``running_map`` dict insertion, which the seed
+  iterated) plus a lazy wake-time heap: a job is only examined once
+  ``head_start + threshold × mean`` has passed.  Every event that can make
+  a job eligible earlier (new sample changing the mean, new running task)
+  pushes a fresh wake entry, so no eligibility point is missed.  The chosen
+  (job, task) is identical to the seed scan: first job in submission order,
+  first running map in insertion order.
+* **Heartbeats stop when idle and re-arm on submit.**  The seed re-armed a
+  node's heartbeat only while some *current* job was unfinished — a job
+  submitted after an idle gap was never scheduled (deadlock), while a run
+  with no jobs ticked forever.  Heartbeat chains now die when there is no
+  active job, and every ``submit`` event revives dead chains.
+* ``events_processed`` counts processed events for benchmarking.
 """
 from __future__ import annotations
 
@@ -16,7 +34,7 @@ import heapq
 import math
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.scheduler import CompletionTimeScheduler, Launch, SchedulerBase
@@ -40,6 +58,7 @@ class SimResult:
     makespan: float
     reconfig_stats: Dict[str, float] = field(default_factory=dict)
     speculative_launches: int = 0
+    events_processed: int = 0
 
     # -- derived metrics ----------------------------------------------------
     def completion_time(self, job_id: str) -> float:
@@ -61,6 +80,34 @@ class SimResult:
         loc = sum(j.local_map_launches for j in self.jobs.values())
         tot = loc + sum(j.remote_map_launches for j in self.jobs.values())
         return loc / tot if tot else 0.0
+
+
+class _SpecQueue:
+    """Insertion-ordered running-map queue of one job, for speculation.
+
+    Mirrors ``running_map`` dict-key order exactly: a re-launch of an index
+    already present (parked task also launched directly) keeps its original
+    position, like a dict key re-assignment.  Entries are (idx, append-time
+    start); the *live* RunningTask's start is authoritative — a later
+    re-launch refreshes it, which the eligibility walk accounts for.
+    """
+
+    __slots__ = ("entries", "head", "present")
+
+    def __init__(self) -> None:
+        self.entries: List[Tuple[int, float]] = []
+        self.head = 0
+        self.present: Set[int] = set()
+
+    def append(self, idx: int, start: float) -> None:
+        if idx not in self.present:
+            self.present.add(idx)
+            self.entries.append((idx, start))
+
+    def compact(self) -> None:
+        if self.head > 64 and self.head * 2 > len(self.entries):
+            self.entries = self.entries[self.head:]
+            self.head = 0
 
 
 class ClusterSim:
@@ -85,6 +132,19 @@ class ClusterSim:
         self.n_speculative = 0
         self.events: List[Tuple[float, int, str, object]] = []
         self._seq = 0
+        self.events_processed = 0
+        # -- heartbeat liveness (deadlock/churn fix) -------------------------
+        self._hb_dead: Set[int] = set()
+        self._pending_submits = 0
+        # -- incremental speculation state -----------------------------------
+        self._spec_q: Dict[str, _SpecQueue] = {}
+        self._job_seq: Dict[str, int] = {}
+        # (wake_time, job_seq, job_id): job may have an eligible straggler
+        # at wake_time; lazy — revalidated on pop
+        self._spec_wake: List[Tuple[float, int, str]] = []
+        # (job_seq, job_id): jobs whose wake time has passed
+        self._spec_ready: List[Tuple[int, str]] = []
+        self._spec_ready_set: Set[str] = set()
         self.reconfig: Optional[Reconfigurator] = getattr(
             scheduler, "reconfig", None) if scheduler.uses_reconfig else None
         if self.reconfig is not None:
@@ -130,6 +190,7 @@ class ClusterSim:
 
     # -- main loop --------------------------------------------------------------
     def run(self, jobs: List[JobSpec], until: float = 10_000_000.0) -> SimResult:
+        self._pending_submits = len(jobs)
         for job in jobs:
             self._push(job.submit_time, "submit", job)
         for node in range(self.spec.num_nodes):
@@ -140,8 +201,21 @@ class ClusterSim:
             now, _, kind, data = heapq.heappop(self.events)
             if now > until:
                 break
+            self.events_processed += 1
             if kind == "submit":
+                self._pending_submits -= 1
+                self._job_seq[data.job_id] = len(self._job_seq)
                 self.sched.job_added(data, now)
+                if self._hb_dead:
+                    # revive heartbeat chains that stopped while the cluster
+                    # was idle — without this, a job submitted after an idle
+                    # gap would never be scheduled (seed deadlock)
+                    for node in sorted(self._hb_dead):
+                        self._push(
+                            now + self.spec.heartbeat_interval
+                            * (1 + node / self.spec.num_nodes),
+                            "heartbeat", node)
+                    self._hb_dead.clear()
             elif kind == "finish":
                 self._on_finish(data, now)
             elif kind == "plug":
@@ -149,10 +223,14 @@ class ClusterSim:
             elif kind == "heartbeat":
                 node = data
                 self._heartbeat(node, now)
-                if any(not j.finished for j in self.sched.jobs.values()) or \
-                        not self.sched.jobs:
+                if self.sched.has_active_jobs() or (
+                        not self.sched.jobs and self._pending_submits > 0):
                     self._push(now + self.spec.heartbeat_interval, "heartbeat",
                                node)
+                else:
+                    # idle: let this chain die instead of ticking forever;
+                    # the next submit revives it
+                    self._hb_dead.add(node)
         result = SimResult(
             scheduler=self.sched.name,
             jobs=self.sched.jobs,
@@ -160,6 +238,7 @@ class ClusterSim:
             if self.sched.jobs else 0.0,
             reconfig_stats=dict(self.reconfig.stats) if self.reconfig else {},
             speculative_launches=self.n_speculative,
+            events_processed=self.events_processed,
         )
         return result
 
@@ -171,6 +250,16 @@ class ClusterSim:
                          launch.local, speculative)
         if launch.task.kind == TaskKind.MAP:
             self.map_running[launch.node].append(rt)
+            if not speculative:
+                jid = launch.task.job_id
+                q = self._spec_q.get(jid)
+                if q is None:
+                    q = self._spec_q[jid] = _SpecQueue()
+                q.append(launch.task.index, now)
+                if job.map_durations:
+                    mean = job.map_duration_sum / len(job.map_durations)
+                    self._spec_push_wake(
+                        jid, now + self.spec_threshold * mean)
         else:
             self.red_running[launch.node].append(rt)
         self.live[(launch.task, speculative)] = rt
@@ -196,6 +285,18 @@ class ClusterSim:
             if twin in tl:
                 tl.remove(twin)
         self.sched.task_finished(rt.task, rt.node, now, now - rt.start)
+        if rt.task.kind == TaskKind.MAP:
+            # the job's mean map duration changed: its head straggler may
+            # now cross the speculation threshold earlier (or at all)
+            jid = rt.task.job_id
+            job = self.sched.jobs[jid]
+            q = self._spec_q.get(jid)
+            if q is not None and job.running_map and job.map_durations:
+                mean = job.map_duration_sum / len(job.map_durations)
+                head = self._spec_head_start(q, job)
+                if head is not None:
+                    self._spec_push_wake(
+                        jid, max(now, head + self.spec_threshold * mean))
         # Paper §4.1: "the target system will soon have a free core, as a
         # task finishes in one of the VMs, and a local task is not found for
         # the VM" — on every map finish, a VM with no local pending work
@@ -243,24 +344,108 @@ class ClusterSim:
         if self.speculative:
             self._maybe_speculate(node, now)
 
+    # -- incremental speculative execution ------------------------------------
+    def _spec_push_wake(self, jid: str, wake: float) -> None:
+        # nudge the wake a hair early: `start + θ·mean` can round *above* the
+        # exact eligibility boundary `now - start > θ·mean`; waking early is
+        # harmless (candidates are revalidated with the exact expression),
+        # waking late would miss the seed's pick
+        heapq.heappush(self._spec_wake,
+                       (wake - 1e-6, self._job_seq.get(jid, 0), jid))
+
+    def _spec_head_start(self, q: _SpecQueue, job: JobRuntime) -> Optional[float]:
+        """Drop permanently-dead head entries; return the head's *recorded*
+        (append-time) start.  Recorded starts are non-decreasing along the
+        queue and never exceed the live start, so a wake computed from the
+        head's recorded start lower-bounds every entry's eligibility time —
+        even when a re-launch refreshed some entry's live start.  An early
+        wake only costs one extra revalidation."""
+        entries, running = q.entries, job.running_map
+        while q.head < len(entries):
+            idx, start = entries[q.head]
+            if idx not in running or TaskId(
+                    job.spec.job_id, TaskKind.MAP, idx) in self.spec_launched:
+                q.present.discard(idx)
+                q.head += 1
+                continue
+            q.compact()
+            return start
+        q.compact()
+        return None
+
+    def _spec_candidate(self, job: JobRuntime, q: _SpecQueue,
+                        now: float) -> Optional[TaskId]:
+        """First speculation-eligible running map in insertion order.
+
+        Append-time starts are non-decreasing, so once an entry whose live
+        start equals its recorded start is ineligible, every later entry is
+        too, and the walk stops.  An entry whose start was *refreshed* by a
+        re-launch (live start > recorded) does not bound its successors, so
+        the walk continues past it — matching the seed's full dict scan.
+        """
+        if not job.map_durations:
+            return None
+        threshold = (self.spec_threshold
+                     * (job.map_duration_sum / len(job.map_durations)))
+        entries, running = q.entries, job.running_map
+        jid = job.spec.job_id
+        i = q.head
+        while i < len(entries):
+            idx, rec_start = entries[i]
+            task = TaskId(jid, TaskKind.MAP, idx)
+            if idx not in running or task in self.spec_launched:
+                if i == q.head:           # permanently dead: drop from head
+                    q.present.discard(idx)
+                    q.head += 1
+                i += 1
+                continue
+            rt = self.live.get((task, False))
+            if rt is None:
+                i += 1                    # running but not live: seed skips it
+                continue
+            if now - rt.start > threshold:
+                return task
+            if rt.start <= rec_start:
+                return None               # unrefreshed + ineligible: walk ends
+            i += 1                        # refreshed entry: keep scanning
+        return None
+
     def _maybe_speculate(self, node: int, now: float) -> None:
-        """Hadoop-style speculative re-execution of straggling maps."""
+        """Hadoop-style speculative re-execution of straggling maps.
+
+        Identical decisions to the seed's per-heartbeat full rescan, found
+        via the lazy wake heap: first submitted job with an eligible
+        straggler, earliest-launched eligible map of that job."""
         if self.free_map(node) <= 0:
             return
-        for job in self.sched.jobs.values():
-            if job.finished or not job.map_durations:
-                continue
-            mean = sum(job.map_durations) / len(job.map_durations)
-            for idx, vnode in list(job.running_map.items()):
-                task = TaskId(job.spec.job_id, TaskKind.MAP, idx)
-                key = (task, False)
-                if key not in self.live or task in self.spec_launched:
-                    continue
-                rt = self.live[key]
-                if now - rt.start > self.spec_threshold * mean:
-                    self.spec_launched.add(task)
-                    self.n_speculative += 1
-                    local = node in job.spec.block_placement[idx]
-                    self._launch(Launch(task, node, local=local), now,
-                                 speculative=True)
-                    return
+        wake, ready, ready_set = (self._spec_wake, self._spec_ready,
+                                  self._spec_ready_set)
+        while wake and wake[0][0] <= now:
+            _, seq, jid = heapq.heappop(wake)
+            if jid not in ready_set:
+                ready_set.add(jid)
+                heapq.heappush(ready, (seq, jid))
+        while ready:
+            seq, jid = ready[0]
+            job = self.sched.jobs[jid]
+            q = self._spec_q.get(jid)
+            task = (None if (job.finished or q is None)
+                    else self._spec_candidate(job, q, now))
+            if task is not None:
+                self.spec_launched.add(task)
+                self.n_speculative += 1
+                idx = task.index
+                local = node in job.spec.block_placement[idx]
+                self._launch(Launch(task, node, local=local), now,
+                             speculative=True)
+                return
+            # not eligible now: drop from the ready set and, if the job still
+            # has a live head, schedule its next possible eligibility time
+            heapq.heappop(ready)
+            ready_set.discard(jid)
+            if q is not None and not job.finished and job.map_durations:
+                head = self._spec_head_start(q, job)
+                if head is not None:
+                    mean = job.map_duration_sum / len(job.map_durations)
+                    self._spec_push_wake(
+                        jid, max(now, head + self.spec_threshold * mean))

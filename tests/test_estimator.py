@@ -2,7 +2,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.estimator import (OnlineEstimator, completion_time,
                                   mean_task_length, min_slots)

@@ -1,0 +1,94 @@
+"""Large-fleet scenario suite + the heartbeat re-arm (deadlock/churn) fixes."""
+import random
+
+import pytest
+
+from repro.core.baselines import FIFOScheduler
+from repro.core.types import ClusterSpec, JobSpec, WorkloadProfile
+from repro.simcluster.largescale import SCENARIOS, run_scenario
+from repro.simcluster.sim import ClusterSim
+from repro.simcluster.workloads import make_job
+
+
+PROF = WorkloadProfile(name="t", map_time=10.0, reduce_time=5.0,
+                       shuffle_time_per_pair=0.0, time_cv=0.0)
+
+
+def test_scenario_registry_shapes():
+    assert "fleet_100x2_sustained" in SCENARIOS
+    for sc in SCENARIOS.values():
+        spec = sc.cluster()
+        jobs = sc.jobs(spec, seed=1)
+        assert len(jobs) == sc.num_jobs
+        assert spec.num_machines == sc.num_machines
+        # arrival trace is sorted and bursty patterns respect the gap
+        submits = [j.submit_time for j in jobs]
+        assert submits == sorted(submits)
+        # placement stays within the fleet
+        for j in jobs[:5]:
+            for replicas in j.block_placement:
+                assert all(0 <= v < spec.num_nodes for v in replicas)
+
+
+def test_scenario_jobs_deterministic_per_seed():
+    sc = SCENARIOS["smoke_40x2"]
+    spec = sc.cluster()
+    a = sc.jobs(spec, seed=5)
+    b = sc.jobs(spec, seed=5)
+    assert [(j.job_id, j.submit_time, j.block_placement) for j in a] \
+        == [(j.job_id, j.submit_time, j.block_placement) for j in b]
+
+
+def test_smoke_scenario_completes_all_jobs():
+    res = run_scenario("smoke_40x2", seed=0)
+    assert all(j.finish_time is not None for j in res.jobs.values())
+    assert res.makespan > 0
+
+
+def test_job_after_idle_gap_is_scheduled():
+    """Seed-engine deadlock regression: heartbeats must re-arm on submit.
+
+    Job B arrives 500 s after job A finished; the seed engine's heartbeat
+    chains all died when A completed, so B starved forever."""
+    spec = ClusterSpec(num_machines=2, vms_per_machine=2)
+    a = JobSpec(job_id="a", profile=PROF, u_m=2, v_r=1, deadline=5_000.0,
+                submit_time=0.0, block_placement=[(0,), (1,)])
+    b = JobSpec(job_id="b", profile=PROF, u_m=2, v_r=1, deadline=5_000.0,
+                submit_time=500.0, block_placement=[(2,), (3,)])
+    res = ClusterSim(spec, FIFOScheduler(spec), seed=0).run([a, b],
+                                                            until=5_000.0)
+    assert res.jobs["a"].finish_time is not None
+    assert res.jobs["b"].finish_time is not None, \
+        "job submitted after idle gap was never scheduled"
+    assert res.jobs["b"].finish_time < 700.0
+
+
+def test_idle_heartbeats_do_not_churn():
+    """With no jobs at all the event loop must terminate immediately rather
+    than ticking heartbeats until the horizon (seed churned ~3.3M events)."""
+    spec = ClusterSpec(num_machines=2, vms_per_machine=2)
+    sim = ClusterSim(spec, FIFOScheduler(spec), seed=0)
+    res = sim.run([])
+    assert sim.events_processed <= spec.num_nodes  # one dying beat per node
+    assert res.makespan == 0.0
+
+
+def test_heartbeats_stop_after_last_job():
+    """After the final job completes, every chain dies instead of ticking to
+    the 10M-second horizon."""
+    spec = ClusterSpec(num_machines=2, vms_per_machine=2)
+    rng = random.Random(0)
+    job = make_job("j", "grep", 0.5, 4_000.0, spec, rng)
+    sim = ClusterSim(spec, FIFOScheduler(spec), seed=0)
+    res = sim.run([job])
+    assert res.jobs["j"].finish_time is not None
+    # events are bounded by actual work, not the horizon: generous cap
+    assert sim.events_processed < 10_000
+
+
+@pytest.mark.slow
+def test_midsize_fleet_all_schedulers():
+    for kind in ("proposed", "fair", "fifo"):
+        res = run_scenario("smoke_40x2", scheduler=kind, seed=2)
+        done = sum(1 for j in res.jobs.values() if j.finish_time is not None)
+        assert done == len(res.jobs), kind

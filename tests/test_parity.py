@@ -1,0 +1,108 @@
+"""Decision-parity contract: the incremental-index engine must reproduce the
+frozen seed engine's scheduling decisions *exactly*.
+
+The optimized scheduler/simulator (per-job pending heaps, per-node local
+index, lazy speculation heap, incremental reconfigurator queues) is a pure
+reimplementation of the seed semantics — same candidate order, same RNG
+draw sequence, same event tie-breaking.  For fixed seeds on the paper
+cluster the two engines must therefore agree bit-for-bit on every
+``SimResult`` metric, not just approximately.
+
+If one of these tests fails after an engine change, the change altered
+scheduling *behaviour*, not just speed — either fix it or (if the new
+behaviour is intended) update the frozen legacy engine AND the paper-repro
+expectations together.
+"""
+import pytest
+
+from repro.core.baselines import FairScheduler, FIFOScheduler
+from repro.core.reconfigurator import Reconfigurator
+from repro.core.scheduler import CompletionTimeScheduler
+from repro.simcluster._legacy import (LegacyClusterSim,
+                                      LegacyCompletionTimeScheduler,
+                                      LegacyFairScheduler,
+                                      LegacyFIFOScheduler,
+                                      LegacyReconfigurator)
+from repro.simcluster.sim import ClusterSim
+from repro.simcluster.workloads import (paper_cluster, paper_job_mix,
+                                        paper_table2_jobs)
+
+
+def _proposed(spec):
+    s = CompletionTimeScheduler(spec, Reconfigurator(spec, max_wait=30.0))
+    s.park_depth = 4
+    return s
+
+
+def _legacy_proposed(spec):
+    s = LegacyCompletionTimeScheduler(spec,
+                                      LegacyReconfigurator(spec, max_wait=30.0))
+    s.park_depth = 4
+    return s
+
+
+SCHEDULERS = {
+    "proposed": (_proposed, _legacy_proposed),
+    "fair": (FairScheduler, LegacyFairScheduler),
+    "fifo": (FIFOScheduler, LegacyFIFOScheduler),
+}
+
+
+def _run_both(which, seed, jobs_fn):
+    spec = paper_cluster()
+    new_sched, old_sched = SCHEDULERS[which]
+    res_new = ClusterSim(spec, new_sched(spec), seed=seed).run(
+        jobs_fn(spec, seed))
+    res_old = LegacyClusterSim(spec, old_sched(spec), seed=seed).run(
+        jobs_fn(spec, seed))
+    return res_new, res_old
+
+
+def _assert_identical(res_new, res_old):
+    # headline SimResult metrics — exact, not approximate
+    assert res_new.makespan == res_old.makespan
+    assert res_new.deadlines_met() == res_old.deadlines_met()
+    assert res_new.locality_rate() == res_old.locality_rate()
+    assert res_new.speculative_launches == res_old.speculative_launches
+    # per-job agreement pins the full decision sequence, not just aggregates
+    assert set(res_new.jobs) == set(res_old.jobs)
+    for jid, new in res_new.jobs.items():
+        old = res_old.jobs[jid]
+        assert new.finish_time == old.finish_time, jid
+        assert new.local_map_launches == old.local_map_launches, jid
+        assert new.remote_map_launches == old.remote_map_launches, jid
+        assert new.reconfig_map_launches == old.reconfig_map_launches, jid
+        assert new.map_durations == old.map_durations, jid
+        assert new.reduce_durations == old.reduce_durations, jid
+    for key in ("reconfigurations", "parked", "expired"):
+        assert (res_new.reconfig_stats.get(key)
+                == res_old.reconfig_stats.get(key))
+
+
+@pytest.mark.parametrize("which", ["proposed", "fair", "fifo"])
+@pytest.mark.parametrize("seed", [3, 11])
+def test_table2_parity(which, seed):
+    res_new, res_old = _run_both(
+        which, seed, lambda spec, s: paper_table2_jobs(spec, seed=s))
+    _assert_identical(res_new, res_old)
+
+
+@pytest.mark.parametrize("which", ["proposed", "fair"])
+def test_job_mix_parity(which):
+    res_new, res_old = _run_both(
+        which, 2, lambda spec, s: paper_job_mix(spec, sizes_gb=(2, 4, 6),
+                                                seed=s))
+    _assert_identical(res_new, res_old)
+
+
+def test_parity_with_heavy_stragglers():
+    """Speculation bookkeeping is the trickiest incremental path — pin it
+    under a straggler rate high enough to force many speculative launches."""
+    spec = paper_cluster()
+    res_new = ClusterSim(spec, _proposed(spec), seed=9, straggler_prob=0.2).run(
+        paper_table2_jobs(spec, seed=9))
+    res_old = LegacyClusterSim(
+        spec, _legacy_proposed(spec), seed=9, straggler_prob=0.2).run(
+        paper_table2_jobs(spec, seed=9))
+    assert res_new.speculative_launches > 0
+    _assert_identical(res_new, res_old)

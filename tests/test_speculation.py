@@ -1,0 +1,114 @@
+"""Speculative-execution bookkeeping: twin cancellation, launch counting,
+and duration recording — satellite coverage for the incremental speculation
+path in ``simcluster/sim.py``.
+
+The fixed-duration harness replaces the stochastic duration model with a
+script: the first launch of map 0 is a straggler, every other task is fast.
+That makes the speculative copy's win deterministic, so the tests can assert
+exact bookkeeping instead of distributional properties.
+"""
+import math
+
+import pytest
+
+from repro.core.baselines import FIFOScheduler
+from repro.core.types import (ClusterSpec, JobSpec, TaskKind,
+                              WorkloadProfile)
+from repro.simcluster.sim import ClusterSim
+
+
+PROF = WorkloadProfile(name="t", map_time=10.0, reduce_time=5.0,
+                       shuffle_time_per_pair=0.0, time_cv=0.0)
+
+
+def _spec():
+    return ClusterSpec(num_machines=2, vms_per_machine=2)
+
+
+def _job(spec, u_m=6, v_r=1):
+    # every block on node 0 so locality is deterministic
+    return JobSpec(job_id="j", profile=PROF, u_m=u_m, v_r=v_r,
+                   deadline=10_000.0,
+                   block_placement=[(0,)] * u_m)
+
+
+class FixedDurationSim(ClusterSim):
+    """First launch of j/map0 runs STRAGGLE seconds; everything else FAST."""
+
+    STRAGGLE = 400.0
+    FAST = 10.0
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._straggled = False
+        self.duration_log = []   # (task, speculative-launch?, duration)
+
+    def task_duration(self, job, task, local):
+        if (task.kind == TaskKind.MAP and task.index == 0
+                and not self._straggled):
+            self._straggled = True
+            d = self.STRAGGLE
+        else:
+            d = self.FAST
+        self.duration_log.append((str(task), d))
+        return d
+
+
+def _run(speculative=True):
+    spec = _spec()
+    sched = FIFOScheduler(spec)
+    sim = FixedDurationSim(spec, sched, seed=0, straggler_prob=0.0,
+                           speculative=speculative)
+    res = sim.run([_job(spec)])
+    return sim, res
+
+
+def test_speculative_copy_launched_and_counted():
+    sim, res = _run()
+    assert res.speculative_launches == 1
+    assert sim.n_speculative == 1
+    # the straggling original was map 0
+    assert any(t == "j/map0" and d == FixedDurationSim.STRAGGLE
+               for t, d in sim.duration_log)
+    # a second (fast) copy of map 0 was launched
+    assert sum(1 for t, _ in sim.duration_log if t == "j/map0") == 2
+
+
+def test_twin_cancelled_on_speculative_win():
+    sim, res = _run()
+    job = res.jobs["j"]
+    # every task completed exactly once: no duplicate completions
+    assert len(job.completed_map) == job.spec.u_m
+    assert len(job.map_durations) == job.spec.u_m
+    # the loser's finish event must not leave a live entry or an occupied slot
+    assert not sim.live
+    assert all(not running for running in sim.map_running)
+    assert all(not running for running in sim.red_running)
+
+
+def test_speculative_win_records_winner_duration():
+    sim, res = _run()
+    job = res.jobs["j"]
+    # the straggler lost: map 0's recorded duration is the fast copy's
+    # elapsed time, not the 400 s original
+    assert max(job.map_durations) < FixedDurationSim.STRAGGLE
+    # and the win bounds the makespan far below the straggler's finish
+    assert res.makespan < FixedDurationSim.STRAGGLE
+
+
+def test_no_speculation_when_disabled():
+    sim_on, res_on = _run(speculative=True)
+    sim_off, res_off = _run(speculative=False)
+    assert res_off.speculative_launches == 0
+    assert not sim_off.spec_launched
+    # with speculation off the straggler runs to completion
+    assert math.isclose(max(res_off.jobs["j"].map_durations),
+                        FixedDurationSim.STRAGGLE)
+    assert res_on.makespan < res_off.makespan
+
+
+def test_each_task_speculated_at_most_once():
+    sim, res = _run()
+    assert len(sim.spec_launched) == 1
+    (task,) = sim.spec_launched
+    assert task.index == 0 and task.kind == TaskKind.MAP

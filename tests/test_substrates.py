@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_lr
 
