@@ -23,12 +23,36 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 import time
 from pathlib import Path
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO_ROOT / "src"))
+
+# engine identifiers stamped into every per-engine entry so the perf
+# trajectory across PRs stays attributable to a specific implementation
+ENGINE_IDS = {
+    "indexed": "simcluster.sim/incremental-index",
+    "legacy": "simcluster._legacy/seed-frozen",
+}
+
+
+def git_commit() -> str:
+    """Short HEAD hash, with ``-dirty`` when the tree has uncommitted
+    changes — numbers from uncommitted code must not impersonate a commit."""
+    try:
+        commit = subprocess.run(
+            ["git", "-C", str(REPO_ROOT), "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True,
+            timeout=10).stdout.strip()
+        status = subprocess.run(
+            ["git", "-C", str(REPO_ROOT), "status", "--porcelain"],
+            capture_output=True, text=True, check=True, timeout=10).stdout
+        return commit + ("-dirty" if status.strip() else "")
+    except Exception:
+        return "unknown"
 
 from repro.core.reconfigurator import Reconfigurator            # noqa: E402
 from repro.core.scheduler import CompletionTimeScheduler        # noqa: E402
@@ -41,9 +65,11 @@ from repro.simcluster.workloads import (paper_cluster,           # noqa: E402
                                         paper_table2_jobs)
 
 
-def _summarize(result, wall: float) -> dict:
+def _summarize(result, wall: float, engine: str, commit: str) -> dict:
     done = sum(1 for j in result.jobs.values() if j.finish_time is not None)
     return {
+        "engine_id": ENGINE_IDS[engine],
+        "git_commit": commit,
         "wall_time_s": round(wall, 4),
         "events": result.events_processed,
         "events_per_sec": round(result.events_processed / wall, 1) if wall else None,
@@ -56,7 +82,7 @@ def _summarize(result, wall: float) -> dict:
     }
 
 
-def bench_paper_cluster(seed: int = 3) -> dict:
+def bench_paper_cluster(seed: int = 3, commit: str = "unknown") -> dict:
     """Paper-sized cluster on both engines (also a live parity check)."""
     out = {}
     spec = paper_cluster()
@@ -70,7 +96,7 @@ def bench_paper_cluster(seed: int = 3) -> dict:
             sim = LegacyClusterSim(spec, sched, seed=seed)
         t0 = time.perf_counter()
         res = sim.run(paper_table2_jobs(spec, seed=seed))
-        out[engine] = _summarize(res, time.perf_counter() - t0)
+        out[engine] = _summarize(res, time.perf_counter() - t0, engine, commit)
     out["speedup"] = round(out["legacy"]["wall_time_s"]
                            / out["indexed"]["wall_time_s"], 2)
     out["parity"] = (out["indexed"]["sim_makespan_s"]
@@ -78,12 +104,13 @@ def bench_paper_cluster(seed: int = 3) -> dict:
     return out
 
 
-def bench_scenario(name: str, *, seed: int = 0, engines=("indexed",)) -> dict:
+def bench_scenario(name: str, *, seed: int = 0, engines=("indexed",),
+                   commit: str = "unknown") -> dict:
     out: dict = {"description": SCENARIOS[name].description}
     for engine in engines:
         t0 = time.perf_counter()
         res = run_scenario(name, engine=engine, seed=seed)
-        out[engine] = _summarize(res, time.perf_counter() - t0)
+        out[engine] = _summarize(res, time.perf_counter() - t0, engine, commit)
     if "legacy" in out and "indexed" in out:
         out["speedup"] = round(out["legacy"]["wall_time_s"]
                                / out["indexed"]["wall_time_s"], 2)
@@ -102,8 +129,10 @@ def main(argv=None) -> int:
     ap.add_argument("--out", type=Path, default=REPO_ROOT / "BENCH_sim.json")
     args = ap.parse_args(argv)
 
+    commit = git_commit()
     results: dict = {"mode": "quick" if args.quick else "full",
-                     "seed": args.seed, "scenarios": {}}
+                     "seed": args.seed, "git_commit": commit,
+                     "scenarios": {}}
     t_start = time.perf_counter()
 
     if args.scenarios:
@@ -113,17 +142,18 @@ def main(argv=None) -> int:
                      f"available: {', '.join(sorted(SCENARIOS))}")
         for name in args.scenarios:
             print(f"[bench] {name} (indexed) ...", flush=True)
-            results["scenarios"][name] = bench_scenario(name, seed=args.seed)
+            results["scenarios"][name] = bench_scenario(
+                name, seed=args.seed, commit=commit)
     else:
         print("[bench] paper cluster (indexed + legacy) ...", flush=True)
-        results["scenarios"]["paper_20x2"] = bench_paper_cluster()
+        results["scenarios"]["paper_20x2"] = bench_paper_cluster(commit=commit)
         print("[bench] smoke_40x2 (indexed) ...", flush=True)
         results["scenarios"]["smoke_40x2"] = bench_scenario(
-            "smoke_40x2", seed=args.seed)
+            "smoke_40x2", seed=args.seed, commit=commit)
         if args.quick:
             print("[bench] fleet_100x2_sustained (indexed) ...", flush=True)
             results["scenarios"]["fleet_100x2_sustained"] = bench_scenario(
-                "fleet_100x2_sustained", seed=args.seed)
+                "fleet_100x2_sustained", seed=args.seed, commit=commit)
         else:
             # the headline comparison: >=100 machines, >=100 jobs, both
             # engines.  The arrival trace is gap-free so the seed engine's
@@ -132,14 +162,14 @@ def main(argv=None) -> int:
                   "the legacy run takes minutes) ...", flush=True)
             results["scenarios"]["fleet_100x2_sustained"] = bench_scenario(
                 "fleet_100x2_sustained", seed=args.seed,
-                engines=("indexed", "legacy"))
+                engines=("indexed", "legacy"), commit=commit)
             for name in ("fleet_100x2", "fleet_200x2", "fleet_200x4",
                          "fleet_400x2", "burst_idle_gap"):
                 print(f"[bench] {name} (indexed; impossible on the seed "
                       "engine: idle-gap deadlock / intractable scan cost) ...",
                       flush=True)
                 results["scenarios"][name] = bench_scenario(
-                    name, seed=args.seed)
+                    name, seed=args.seed, commit=commit)
 
     results["total_wall_time_s"] = round(time.perf_counter() - t_start, 2)
     args.out.write_text(json.dumps(results, indent=2) + "\n")

@@ -1,0 +1,69 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + quick sim benchmark, failing on perf regression
+# against the committed BENCH_sim.json numbers.
+#
+#   scripts/check.sh            # full gate
+#   SKIP_TESTS=1 scripts/check.sh   # bench regression check only
+#   BENCH_TOL=0.5 scripts/check.sh  # allowed fractional events/sec drop
+#
+# The tolerance is deliberately loose (default 0.5: fail only when a
+# scenario's indexed events/sec drops below half the committed number) —
+# shared CI machines are noisy; the gate catches order-of-magnitude
+# regressions like an index silently degrading to a rescan, not ±20% noise.
+set -euo pipefail
+
+REPO_ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$REPO_ROOT"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+BENCH_TOL="${BENCH_TOL:-0.5}"
+QUICK_OUT="$(mktemp /tmp/bench_quick.XXXXXX.json)"
+trap 'rm -f "$QUICK_OUT"' EXIT
+
+if [[ "${SKIP_TESTS:-0}" != "1" ]]; then
+    echo "== tier-1 tests =="
+    python -m pytest -x -q
+fi
+
+echo "== quick sim benchmark =="
+python benchmarks/bench_sim.py --quick --out "$QUICK_OUT"
+
+echo "== regression check vs committed BENCH_sim.json (tol ${BENCH_TOL}) =="
+python - "$QUICK_OUT" "$BENCH_TOL" <<'PY'
+import json, sys
+from pathlib import Path
+
+quick = json.loads(Path(sys.argv[1]).read_text())
+tol = float(sys.argv[2])
+committed = json.loads(Path("BENCH_sim.json").read_text())
+
+failures = []
+for name, entry in quick["scenarios"].items():
+    base = committed["scenarios"].get(name)
+    if base is None:
+        print(f"  {name}: not in committed BENCH_sim.json, skipping")
+        continue
+    # parity between engines must hold wherever the quick run measured it
+    if entry.get("parity") is False:
+        failures.append(f"{name}: indexed/legacy parity broken")
+    for engine in ("indexed", "legacy"):
+        if engine not in entry or engine not in base:
+            continue
+        new = entry[engine]["events_per_sec"]
+        old = base[engine]["events_per_sec"]
+        floor = old * (1.0 - tol)
+        status = "ok" if new >= floor else "REGRESSION"
+        print(f"  {name}/{engine}: {new:.0f} ev/s vs committed {old:.0f} "
+              f"(floor {floor:.0f}) {status}")
+        if new < floor:
+            failures.append(
+                f"{name}/{engine}: {new:.0f} ev/s < floor {floor:.0f}")
+
+if failures:
+    print("\nFAIL:")
+    for f in failures:
+        print(f"  - {f}")
+    sys.exit(1)
+print("\nbench regression check passed")
+PY
+echo "== all checks passed =="

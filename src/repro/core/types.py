@@ -13,7 +13,7 @@ from __future__ import annotations
 import enum
 import heapq
 import math
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 
@@ -66,6 +66,13 @@ class WorkloadProfile:
     intermediate_ratio: float = 1.0
     time_cv: float = 0.08
 
+    def to_dict(self) -> Dict[str, object]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "WorkloadProfile":
+        return cls(**d)
+
 
 @dataclass
 class JobSpec:
@@ -90,6 +97,20 @@ class JobSpec:
             raise ValueError("jobs need at least one map and one reduce task")
         if self.deadline <= 0:
             raise ValueError("deadline must be positive")
+
+    def to_dict(self) -> Dict[str, object]:
+        # asdict introspects fields, so a future field cannot silently be
+        # left out of the serialized form
+        d = asdict(self)
+        d["block_placement"] = [list(p) for p in d["block_placement"]]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "JobSpec":
+        d = dict(d)
+        d["profile"] = WorkloadProfile.from_dict(d["profile"])
+        d["block_placement"] = [tuple(p) for p in d["block_placement"]]
+        return cls(**d)
 
 
 @dataclass
@@ -251,6 +272,16 @@ class ClusterSpec:
 
     def machine_of(self, node: int) -> int:
         return node // self.vms_per_machine
+
+    def to_dict(self) -> Dict[str, object]:
+        # asdict introspects fields: the experiment cache hashes this dict,
+        # so a hand-maintained list that went stale would alias genuinely
+        # different clusters onto one cache cell
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "ClusterSpec":
+        return cls(**d)
 
 
 def ceil_at_least_one(x: float) -> int:

@@ -1,0 +1,27 @@
+"""Trace-driven experiment harness: declarative sweeps over (trace x cluster
+x scheduler x seed) grids with on-disk caching, a metrics warehouse, and
+paired-bootstrap statistics — the layer every scheduler variant is judged on.
+
+Quickstart::
+
+    PYTHONPATH=src python -m repro.experiments paper --quick
+    PYTHONPATH=src python -m repro.experiments generate --preset bursty \
+        --seed 0 --out traces/bursty.jsonl
+    PYTHONPATH=src python -m repro.experiments compare --trace traces/bursty.jsonl \
+        --a proposed --b fair --seeds 0:5
+"""
+from repro.experiments.metrics import JobRecord, RunRecord, run_record_from_result
+from repro.experiments.runner import (ExperimentSpec, SweepReport, TraceRef,
+                                      run_experiment)
+from repro.experiments.stats import (PairedComparison, bootstrap_mean_ci,
+                                     compare_completion_by_workload,
+                                     compare_throughput, paired_bootstrap)
+from repro.experiments.paperfig import PaperReport, run_paper
+
+__all__ = [
+    "ExperimentSpec", "JobRecord", "PairedComparison", "PaperReport",
+    "RunRecord", "SweepReport", "TraceRef", "bootstrap_mean_ci",
+    "compare_completion_by_workload", "compare_throughput",
+    "paired_bootstrap", "run_experiment", "run_paper",
+    "run_record_from_result",
+]

@@ -1,0 +1,224 @@
+"""CLI for the trace-driven experiment harness.
+
+Subcommands::
+
+    generate   synthesize a trace (preset or custom knobs) to a JSONL file
+    run        sweep a (trace x cluster x scheduler x seeds) grid, cached
+    compare    run two schedulers on the same grid, paired-bootstrap stats
+    paper      reproduce the paper's §5 evaluation and check its claims
+
+Examples::
+
+    PYTHONPATH=src python -m repro.experiments generate --preset bursty \
+        --seed 0 --out traces/bursty.jsonl
+    PYTHONPATH=src python -m repro.experiments run --trace traces/bursty.jsonl \
+        --schedulers proposed fair --seeds 0:3 --machines 20 --vms 2
+    PYTHONPATH=src python -m repro.experiments compare --preset mix_small \
+        --a proposed --b fair --seeds 0:5
+    PYTHONPATH=src python -m repro.experiments paper --quick
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+from repro.core.types import ClusterSpec
+from repro.experiments.paperfig import (FULL_SEEDS, QUICK_SEEDS, run_paper)
+from repro.experiments.runner import (ExperimentSpec, TraceRef, run_experiment)
+from repro.experiments.stats import (compare_completion_by_workload,
+                                     compare_deadlines, compare_throughput)
+from repro.simcluster.traces import (PRESETS, Trace, TraceConfig,
+                                     generate_trace, paper_trace)
+
+DEFAULT_CACHE = Path(".exp-cache")
+
+
+def _parse_seeds(tokens: List[str]) -> Tuple[int, ...]:
+    """Accept explicit seeds and half-open ``a:b`` ranges: ``0 1 4:8``."""
+    out: List[int] = []
+    for tok in tokens:
+        if ":" in tok:
+            a, b = tok.split(":", 1)
+            out.extend(range(int(a), int(b)))
+        else:
+            out.append(int(tok))
+    if not out:
+        raise argparse.ArgumentTypeError("no seeds given")
+    return tuple(dict.fromkeys(out))    # dedup, keep order
+
+
+def _cluster_from_args(args) -> ClusterSpec:
+    return ClusterSpec(num_machines=args.machines,
+                       vms_per_machine=args.vms,
+                       replication=args.replication)
+
+
+def _trace_ref_from_args(args) -> TraceRef:
+    if args.trace is not None:
+        return TraceRef(path=str(args.trace))
+    if args.preset is not None:
+        return TraceRef(preset=args.preset,
+                        seed=getattr(args, "trace_seed", None))
+    raise SystemExit("one of --trace / --preset is required")
+
+
+def _add_grid_args(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--trace", type=Path, default=None,
+                   help="trace JSONL file (from `generate`)")
+    p.add_argument("--preset", default=None,
+                   help="named trace preset: paper, "
+                        + ", ".join(sorted(PRESETS)))
+    p.add_argument("--trace-seed", type=int, default=None,
+                   help="pin the trace seed (default: couple to each sim seed)")
+    p.add_argument("--seeds", nargs="+", default=["0"],
+                   help="sim seeds; accepts `a:b` ranges (default: 0)")
+    p.add_argument("--machines", type=int, default=20)
+    p.add_argument("--vms", type=int, default=2)
+    p.add_argument("--replication", type=int, default=1)
+    p.add_argument("--cache", type=Path, default=DEFAULT_CACHE,
+                   help=f"result cache directory (default: {DEFAULT_CACHE})")
+    p.add_argument("--workers", type=int, default=0,
+                   help="multiprocessing pool size; 0 = inline (default)")
+
+
+def cmd_generate(args) -> int:
+    if args.preset == "paper":
+        if args.num_jobs is not None:
+            raise SystemExit("--num-jobs is incompatible with --preset paper "
+                             "(the Table-2 mix is fixed at 5 jobs)")
+        trace = paper_trace(args.seed)
+    else:
+        if args.preset is None:
+            config = TraceConfig()
+        elif args.preset in PRESETS:
+            config = PRESETS[args.preset]
+        else:
+            raise SystemExit(f"unknown preset {args.preset!r}; available: "
+                             f"paper, {', '.join(sorted(PRESETS))}")
+        if args.num_jobs is not None:
+            config = dataclasses.replace(config, num_jobs=args.num_jobs)
+        trace = generate_trace(config, args.seed)
+    path = trace.save(args.out)
+    counts = ", ".join(f"{w}:{c}" for w, c in
+                       sorted(trace.workload_counts().items()))
+    print(f"wrote {path}: {len(trace.jobs)} jobs over "
+          f"{trace.duration():.0f}s, {trace.total_input_gb():.1f} GB total "
+          f"({counts})")
+    return 0
+
+
+def _print_records(report) -> None:
+    print(f"[{report.spec_name}] {len(report.records)} runs "
+          f"({report.simulated} simulated, {report.cached} cached)")
+    print(f"{'scheduler':10s} {'seed':>4s} {'makespan':>9s} {'tput/h':>7s} "
+          f"{'done':>5s} {'ddl':>4s} {'local%':>7s} {'spec':>5s}")
+    for r in report.records:
+        print(f"{r.scheduler:10s} {r.seed:4d} {r.makespan:9.1f} "
+              f"{r.throughput_jph:7.1f} {r.jobs_finished:3d}/{r.jobs_total:<3d}"
+              f"{r.deadlines_met:4d} {r.locality_rate:7.1%} "
+              f"{r.speculative_launches:5d}")
+
+
+def cmd_run(args) -> int:
+    spec = ExperimentSpec(
+        name=args.name,
+        traces=(_trace_ref_from_args(args),),
+        clusters=(_cluster_from_args(args),),
+        schedulers=tuple(args.schedulers),
+        seeds=_parse_seeds(args.seeds),
+    )
+    report = run_experiment(spec, args.cache, workers=args.workers,
+                            progress=print if args.verbose else None)
+    _print_records(report)
+    return 0
+
+
+def cmd_compare(args) -> int:
+    spec = ExperimentSpec(
+        name=args.name,
+        traces=(_trace_ref_from_args(args),),
+        clusters=(_cluster_from_args(args),),
+        schedulers=(args.a, args.b),
+        seeds=_parse_seeds(args.seeds),
+    )
+    report = run_experiment(spec, args.cache, workers=args.workers,
+                            progress=print if args.verbose else None)
+    by_sched = report.by_scheduler()
+    ra, rb = by_sched[args.a], by_sched[args.b]
+    print(f"[{report.spec_name}] {args.b} vs {args.a} "
+          f"({report.simulated} simulated, {report.cached} cached)")
+    print("  " + compare_throughput(ra, rb).format(args.a, args.b))
+    dl = compare_deadlines(ra, rb)
+    print(f"  deadlines met/run: {args.a} {dl['mean_a']:.1f} -> "
+          f"{args.b} {dl['mean_b']:.1f}")
+    print("  per-workload completion-time gain:")
+    for w, cmp in compare_completion_by_workload(ra, rb).items():
+        print(f"    {w:16s} {cmp.mean_gain_pct:+6.1f}% "
+              f"[{cmp.ci_lo_pct:+6.1f}%, {cmp.ci_hi_pct:+6.1f}%] "
+              f"win {cmp.win_rate:.0%}")
+    return 0
+
+
+def cmd_paper(args) -> int:
+    seeds = (QUICK_SEEDS if args.quick else FULL_SEEDS)
+    if args.seeds is not None:
+        seeds = _parse_seeds(args.seeds)
+    report = run_paper(seeds, cache_dir=args.cache, workers=args.workers,
+                       progress=print if args.verbose else None)
+    print(report.format())
+    if args.quick:
+        return 0                      # quick mode reports, full mode enforces
+    return 1 if report.failures() else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.experiments",
+                                 description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    g = sub.add_parser("generate", help="synthesize a trace to JSONL")
+    g.add_argument("--preset", default=None,
+                   help="paper, " + ", ".join(sorted(PRESETS)))
+    g.add_argument("--seed", type=int, default=0)
+    g.add_argument("--num-jobs", type=int, default=None,
+                   help="override the preset's job count")
+    g.add_argument("--out", type=Path, required=True)
+    g.set_defaults(func=cmd_generate)
+
+    r = sub.add_parser("run", help="run a sweep grid (cached)")
+    _add_grid_args(r)
+    r.add_argument("--schedulers", nargs="+", default=["proposed", "fair"])
+    r.add_argument("--name", default="sweep")
+    r.add_argument("--verbose", action="store_true")
+    r.set_defaults(func=cmd_run)
+
+    c = sub.add_parser("compare", help="paired scheduler comparison")
+    _add_grid_args(c)
+    c.add_argument("--a", default="fair", help="baseline scheduler")
+    c.add_argument("--b", default="proposed", help="candidate scheduler")
+    c.add_argument("--name", default="compare")
+    c.add_argument("--verbose", action="store_true")
+    c.set_defaults(func=cmd_compare)
+
+    p = sub.add_parser("paper", help="reproduce the paper's §5 evaluation")
+    p.add_argument("--quick", action="store_true",
+                   help=f"{len(QUICK_SEEDS)} seeds, report only (no claim "
+                        "enforcement)")
+    p.add_argument("--seeds", nargs="+", default=None,
+                   help="override the seed list; accepts `a:b` ranges")
+    p.add_argument("--cache", type=Path, default=None,
+                   help="cache directory (default: temp dir)")
+    p.add_argument("--workers", type=int, default=0)
+    p.add_argument("--verbose", action="store_true")
+    p.set_defaults(func=cmd_paper)
+
+    args = ap.parse_args(argv)
+    return args.func(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,9 @@
 from repro.simcluster.sim import ClusterSim, SimResult
 from repro.simcluster.largescale import SCENARIOS, Scenario, run_scenario
-from repro.simcluster.workloads import (WORKLOADS, make_job, paper_cluster,
-                                        paper_job_mix, paper_table2_jobs)
+from repro.simcluster.traces import (PRESETS, ArrivalConfig, SizeConfig,
+                                     Trace, TraceConfig, TraceJob,
+                                     generate_trace, paper_trace,
+                                     trace_from_rows)
+from repro.simcluster.workloads import (PAPER_TABLE2_ROWS, WORKLOADS, make_job,
+                                        paper_cluster, paper_job_mix,
+                                        paper_table2_jobs)

@@ -1,0 +1,174 @@
+"""Trace generation determinism, JSONL round-trip, and replay."""
+import json
+
+import pytest
+
+from repro.core.types import ClusterSpec
+from repro.simcluster.traces import (PRESETS, ArrivalConfig, SizeConfig,
+                                     Trace, TraceConfig, TraceJob,
+                                     generate_trace, paper_trace,
+                                     trace_from_rows)
+from repro.simcluster.workloads import (WORKLOADS, n_map_tasks,
+                                        n_reduce_tasks, paper_cluster)
+
+
+def test_same_seed_byte_identical():
+    cfg = PRESETS["bursty"]
+    a = generate_trace(cfg, seed=7).to_jsonl()
+    b = generate_trace(cfg, seed=7).to_jsonl()
+    assert a == b
+
+
+def test_different_seed_differs():
+    cfg = PRESETS["mix_small"]
+    assert (generate_trace(cfg, seed=0).to_jsonl()
+            != generate_trace(cfg, seed=1).to_jsonl())
+
+
+def test_different_config_same_seed_differs():
+    a = generate_trace(PRESETS["mix_small"], seed=0)
+    b = generate_trace(PRESETS["heavy_tail"], seed=0)
+    assert [j.input_gb for j in a.jobs] != [j.input_gb for j in b.jobs[:len(a.jobs)]]
+
+
+def test_jsonl_round_trip_bit_exact(tmp_path):
+    trace = generate_trace(PRESETS["diurnal"], seed=11)
+    p1 = tmp_path / "t1.jsonl"
+    trace.save(p1)
+    loaded = Trace.load(p1)
+    p2 = tmp_path / "t2.jsonl"
+    loaded.save(p2)
+    assert p1.read_bytes() == p2.read_bytes()
+    # and the loaded object is semantically identical
+    assert loaded.name == trace.name and loaded.seed == trace.seed
+    assert loaded.jobs == trace.jobs
+    assert loaded.config == trace.config
+
+
+def test_header_is_versioned_and_validated(tmp_path):
+    trace = generate_trace(PRESETS["mix_small"], seed=0)
+    header = json.loads(trace.to_jsonl().splitlines()[0])
+    assert header["format"] == "repro-trace/v1"
+    assert header["num_jobs"] == len(trace.jobs)
+    with pytest.raises(ValueError, match="unsupported trace format"):
+        Trace.from_jsonl('{"format":"repro-trace/v999","name":"x","seed":0,'
+                         '"num_jobs":0,"config":null}\n')
+    # truncation is detected
+    lines = trace.to_jsonl().splitlines()
+    with pytest.raises(ValueError, match="truncated"):
+        Trace.from_jsonl("\n".join(lines[:-1]))
+
+
+def test_arrivals_sorted_and_sized():
+    for preset in ("mix", "bursty", "diurnal", "heavy_tail"):
+        trace = generate_trace(PRESETS[preset], seed=2)
+        times = [j.submit_time for j in trace.jobs]
+        assert times == sorted(times)
+        assert len(trace.jobs) == PRESETS[preset].num_jobs
+        for j in trace.jobs:
+            cfg = PRESETS[preset].sizes
+            assert cfg.min_gb <= j.input_gb <= cfg.max_gb
+            assert j.workload in WORKLOADS
+            assert j.deadline > 0
+
+
+def test_bursts_produce_tight_clusters():
+    cfg = TraceConfig(name="b", num_jobs=80,
+                      arrival=ArrivalConfig(rate_per_hour=30.0, burst_prob=0.5,
+                                            burst_size_mean=6.0,
+                                            burst_stagger_s=1.0))
+    trace = generate_trace(cfg, seed=4)
+    gaps = [b.submit_time - a.submit_time
+            for a, b in zip(trace.jobs, trace.jobs[1:])]
+    # bursty trace: many tiny gaps next to long exponential gaps
+    assert sum(1 for g in gaps if g <= 1.5) > len(gaps) / 4
+    assert max(gaps) > 30.0
+
+
+def test_mix_weights_respected():
+    cfg = TraceConfig(name="m", num_jobs=200,
+                      mix=(("sort", 1.0), ("grep", 0.0)),
+                      arrival=ArrivalConfig(rate_per_hour=600.0))
+    trace = generate_trace(cfg, seed=0)
+    assert trace.workload_counts() == {"sort": 200}
+
+
+def test_replay_deterministic_and_shape_aware():
+    trace = generate_trace(PRESETS["mix_small"], seed=5)
+    spec = ClusterSpec(num_machines=6, vms_per_machine=2, replication=2)
+    jobs1 = trace.job_specs(spec)
+    jobs2 = trace.job_specs(spec)
+    assert [j.block_placement for j in jobs1] == [j.block_placement for j in jobs2]
+    for tj, j in zip(trace.jobs, jobs1):
+        assert j.u_m == n_map_tasks(tj.input_gb)
+        assert j.v_r == n_reduce_tasks(tj.workload, tj.input_gb)
+        assert len(j.block_placement) == j.u_m
+        for placement in j.block_placement:
+            assert len(placement) == min(2, spec.num_nodes)
+            assert all(0 <= n < spec.num_nodes for n in placement)
+    # a different shape gets placements inside *its* node range
+    small = ClusterSpec(num_machines=2, vms_per_machine=1, replication=1)
+    for j in trace.job_specs(small):
+        assert all(0 <= n < 2 for p in j.block_placement for n in p)
+
+
+def test_paper_trace_matches_table2():
+    trace = paper_trace(seed=3)
+    rows = [(j.workload, j.input_gb, j.deadline) for j in trace.jobs]
+    assert rows == [("grep", 10.0, 650.0), ("wordcount", 5.0, 520.0),
+                    ("sort", 10.0, 500.0), ("permutation", 4.0, 850.0),
+                    ("inverted_index", 8.0, 720.0)]
+    assert all(j.submit_time == 0.0 for j in trace.jobs)
+    # placement re-rolls with the trace seed
+    spec = paper_cluster()
+    p3 = [j.block_placement for j in paper_trace(3).job_specs(spec)]
+    p4 = [j.block_placement for j in paper_trace(4).job_specs(spec)]
+    assert p3 != p4
+    assert p3 == [j.block_placement for j in paper_trace(3).job_specs(spec)]
+
+
+def test_trace_from_rows_explicit_submit_times():
+    trace = trace_from_rows("custom", [("sort", 2.0, 300.0, 0.0),
+                                       ("grep", 1.0, 200.0, 45.5)], seed=0)
+    assert [j.submit_time for j in trace.jobs] == [0.0, 45.5]
+    assert trace.jobs[1].job_id == "custom-0001-grep"
+    # duration is the latest submit even when rows are not time-sorted
+    unsorted = trace_from_rows("u", [("grep", 2.0, 600.0, 500.0),
+                                     ("sort", 4.0, 500.0, 0.0)], seed=0)
+    assert unsorted.duration() == 500.0
+
+
+def test_arrival_config_validation():
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        ArrivalConfig(diurnal_amplitude=-0.5)
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        ArrivalConfig(diurnal_amplitude=1.5)
+    with pytest.raises(ValueError, match="rate_per_hour"):
+        ArrivalConfig(rate_per_hour=0.0)
+    with pytest.raises(ValueError, match="burst_prob"):
+        ArrivalConfig(burst_prob=2.0)
+
+
+def test_size_distributions():
+    logn = SizeConfig(distribution="lognormal", median_gb=2.0, sigma=1.0,
+                      min_gb=0.25, max_gb=64.0)
+    par = SizeConfig(distribution="pareto", alpha=1.2, min_gb=0.5, max_gb=64.0)
+    import random
+    rng = random.Random(0)
+    ln_draws = [logn.draw(rng) for _ in range(500)]
+    pa_draws = [par.draw(rng) for _ in range(500)]
+    assert all(0.25 <= x <= 64.0 for x in ln_draws)
+    assert all(0.5 <= x <= 64.0 for x in pa_draws)
+    # heavy tail: max far above median
+    assert max(pa_draws) > 10 * sorted(pa_draws)[len(pa_draws) // 2]
+    with pytest.raises(ValueError):
+        SizeConfig(distribution="uniform")
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="unknown workload"):
+        TraceConfig(mix=(("nosuch", 1.0),))
+    with pytest.raises(ValueError, match="num_jobs"):
+        TraceConfig(num_jobs=0)
+    cfg = TraceConfig.from_dict(PRESETS["bursty"].to_dict())
+    assert cfg == PRESETS["bursty"]
