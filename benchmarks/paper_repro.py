@@ -2,24 +2,29 @@
 
 Each function returns rows (list of dicts) and prints a compact table.
 The calibrated paper cluster: 20 machines x 2 VMs, per-VM virtual disks
-(replication 1), VM-level placement skew 1.0, 2012 1GbE remote penalty 1.0
-(see EXPERIMENTS.md §Repro for the sensitivity grid over these).
+(replication 1), VM-level placement skew 1.0, 2012 1GbE remote penalty 1.0.
+The regime atlas in EXPERIMENTS.md (from `python -m repro.experiments
+regimes`) maps how these numbers move across workload regimes and fleet
+sizes; the Fig.-2 comparison below runs through the same experiments
+warehouse, so its means carry paired-bootstrap 95% CIs.
 """
 from __future__ import annotations
 
 import statistics
+import tempfile
 from typing import Dict, List
 
 from repro.core.baselines import FairScheduler
 from repro.core.estimator import min_slots
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.scheduler import CompletionTimeScheduler
+from repro.experiments.runner import ExperimentSpec, TraceRef, run_experiment
+from repro.experiments.stats import (bootstrap_mean_ci,
+                                     compare_completion_by_workload)
 from repro.simcluster import ClusterSim
-from repro.simcluster.workloads import (WORKLOADS, default_deadline, make_job,
+from repro.simcluster.workloads import (WORKLOADS, default_deadline,
                                         n_map_tasks, n_reduce_tasks,
-                                        paper_cluster, paper_table2_jobs,
-                                        PAPER_SKEW)
-import random
+                                        paper_cluster, paper_table2_jobs)
 
 
 def _proposed(spec, max_wait=30.0, park_depth=4):
@@ -28,41 +33,68 @@ def _proposed(spec, max_wait=30.0, park_depth=4):
     return s
 
 
-def fig2_completion_times(seeds=(1, 2, 3)) -> List[Dict]:
+def fig2_completion_times(seeds=(1, 2, 3), cache_dir=None,
+                          n_boot: int = 2000) -> List[Dict]:
     """Fig. 2(a)/(b): per-workload completion times at 2..10 GB under Fair
-    vs the proposed scheduler (jobs run as the paper does: the whole mix)."""
-    spec = paper_cluster()
-    rows = []
-    for size in (2, 4, 6, 8, 10):
-        for w in WORKLOADS:
-            cts = {"fair": [], "proposed": []}
-            for seed in seeds:
-                rng = random.Random(seed * 997 + size)
-                jobs = [make_job(f"{w2}-{size}", w2, size,
-                                 default_deadline(w2, size), spec,
-                                 random.Random(seed * 997 + size + i),
-                                 submit_time=i * 10.0, skew=PAPER_SKEW)
-                        for i, w2 in enumerate(WORKLOADS)]
-                for name, sched in (("fair", FairScheduler(spec)),
-                                    ("proposed", _proposed(spec))):
-                    res = ClusterSim(spec, sched, seed=seed).run(
-                        [j for j in jobs])
-                    cts[name].append(res.completion_time(f"{w}-{size}"))
-                    jobs = [make_job(f"{w2}-{size}", w2, size,
-                                     default_deadline(w2, size), spec,
-                                     random.Random(seed * 997 + size + i),
-                                     submit_time=i * 10.0, skew=PAPER_SKEW)
-                            for i, w2 in enumerate(WORKLOADS)]
-            rows.append({"workload": w, "size_gb": size,
-                         "fair_s": statistics.mean(cts["fair"]),
-                         "proposed_s": statistics.mean(cts["proposed"])})
-    print("\n== Fig.2: completion times (s), fair vs proposed ==")
-    print(f"{'workload':16s}" + "".join(f"{s}GB".rjust(16) for s in (2, 4, 6, 8, 10)))
+    vs the proposed scheduler (jobs run as the paper does: the whole mix).
+
+    Runs through the experiments warehouse (``run_experiment`` with a
+    ``rows``-kind ``TraceRef``): each seed re-rolls placement + jitter for
+    *both* schedulers, and the per-cell gain is a paired bootstrap over
+    seeds — the table shows 95% CIs, not bare means.  Pass ``cache_dir`` to
+    reuse sweep results across invocations."""
+    cluster = paper_cluster()
+    tmp = None
+    if cache_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="repro-fig2-")
+        cache_dir = tmp.name
+    rows: List[Dict] = []
+    try:
+        for size in (2, 4, 6, 8, 10):
+            trace_rows = tuple(
+                (w, float(size), default_deadline(w, size), i * 10.0)
+                for i, w in enumerate(WORKLOADS))
+            spec = ExperimentSpec(
+                name=f"fig2-{size}gb",
+                traces=(TraceRef(rows=trace_rows, name=f"fig2-{size}gb"),),
+                clusters=(cluster,),
+                schedulers=("proposed", "fair"),
+                seeds=tuple(seeds),
+            )
+            report = run_experiment(spec, cache_dir)
+            by = report.by_scheduler()
+            per_w = compare_completion_by_workload(by["fair"], by["proposed"],
+                                                   n_boot=n_boot)
+            for w, cmp in per_w.items():
+                rows.append({
+                    "workload": w, "size_gb": size,
+                    "fair_s": cmp.mean_a, "proposed_s": cmp.mean_b,
+                    "gain_pct": cmp.mean_gain_pct,
+                    "ci_lo_pct": cmp.ci_lo_pct, "ci_hi_pct": cmp.ci_hi_pct,
+                    "win_rate": cmp.win_rate, "n_pairs": cmp.n_pairs,
+                })
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+    print("\n== Fig.2: completion times (s), fair vs proposed "
+          f"(paired bootstrap over {len(tuple(seeds))} seeds) ==")
+    print(f"{'workload':16s}" + "".join(f"{s}GB".rjust(16)
+                                        for s in (2, 4, 6, 8, 10)))
     for w in WORKLOADS:
         cells = []
         for size in (2, 4, 6, 8, 10):
-            r = next(r for r in rows if r["workload"] == w and r["size_gb"] == size)
+            r = next(r for r in rows
+                     if r["workload"] == w and r["size_gb"] == size)
             cells.append(f"{r['fair_s']:6.0f}/{r['proposed_s']:6.0f}")
+        print(f"{w:16s}" + "".join(c.rjust(16) for c in cells))
+    print("\n   per-cell completion-time gain, 95% CI (warehouse-paired):")
+    for w in WORKLOADS:
+        cells = []
+        for size in (2, 4, 6, 8, 10):
+            r = next(r for r in rows
+                     if r["workload"] == w and r["size_gb"] == size)
+            cells.append(f"{r['gain_pct']:+5.0f}%"
+                         f"[{r['ci_lo_pct']:+4.0f},{r['ci_hi_pct']:+4.0f}]")
         print(f"{w:16s}" + "".join(c.rjust(16) for c in cells))
     return rows
 
@@ -130,8 +162,11 @@ def throughput_gain(seeds=range(1, 13)) -> Dict:
         locs_f.append(f.locality_rate())
         locs_p.append(p.locality_rate())
         dls.append(p.deadlines_met())
+    mean_gain, ci_lo, ci_hi = bootstrap_mean_ci(gains)
     out = {
-        "mean_gain_pct": statistics.mean(gains) * 100,
+        "mean_gain_pct": mean_gain * 100,
+        "ci_lo_pct": ci_lo * 100,
+        "ci_hi_pct": ci_hi * 100,
         "stdev_gain_pct": statistics.stdev(gains) * 100,
         "locality_fair": statistics.mean(locs_f),
         "locality_proposed": statistics.mean(locs_p),
@@ -140,7 +175,8 @@ def throughput_gain(seeds=range(1, 13)) -> Dict:
         "n_seeds": len(list(seeds)),
     }
     print("\n== Throughput gain (proposed vs fair) ==")
-    print(f"  mean gain {out['mean_gain_pct']:+.1f}% ± {out['stdev_gain_pct']:.1f} "
+    print(f"  mean gain {out['mean_gain_pct']:+.1f}% "
+          f"[{out['ci_lo_pct']:+.1f}%, {out['ci_hi_pct']:+.1f}%] 95% CI "
           f"(paper: ~12%)  locality {out['locality_fair']:.0%} -> "
           f"{out['locality_proposed']:.0%}  deadlines {out['deadlines_met_mean']:.1f}/5")
     return out

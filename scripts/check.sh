@@ -21,7 +21,16 @@ QUICK_OUT="$(mktemp /tmp/bench_quick.XXXXXX.json)"
 trap 'rm -f "$QUICK_OUT"' EXIT
 
 if [[ "${SKIP_TESTS:-0}" != "1" ]]; then
-    echo "== tier-1 tests =="
+    echo "== tier-1 tests (incl. fuzz parity + invariants, bounded profile) =="
+    # The differential fuzz / invariant suites are part of tier-1 with a
+    # deterministic bounded budget: a fixed scenario-seed base and example
+    # cap (and, when the optional hypothesis extra is installed, the
+    # derandomized `tier1` profile registered in tests/test_parity_fuzz.py).
+    # Raise REPRO_FUZZ_SCENARIOS / switch HYPOTHESIS_PROFILE=dev for deeper
+    # local exploration.
+    export REPRO_FUZZ_SCENARIOS="${REPRO_FUZZ_SCENARIOS:-200}"
+    export REPRO_FUZZ_SEED="${REPRO_FUZZ_SEED:-0}"
+    export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-tier1}"
     python -m pytest -x -q
 fi
 

@@ -11,6 +11,8 @@ Quickstart::
         --a proposed --b fair --seeds 0:5
 """
 from repro.experiments.metrics import JobRecord, RunRecord, run_record_from_result
+from repro.experiments.regimes import (RegimeCell, RegimeReport, regime_spec,
+                                       run_regimes)
 from repro.experiments.runner import (ExperimentSpec, SweepReport, TraceRef,
                                       run_experiment)
 from repro.experiments.stats import (PairedComparison, bootstrap_mean_ci,
@@ -20,8 +22,8 @@ from repro.experiments.paperfig import PaperReport, run_paper
 
 __all__ = [
     "ExperimentSpec", "JobRecord", "PairedComparison", "PaperReport",
-    "RunRecord", "SweepReport", "TraceRef", "bootstrap_mean_ci",
-    "compare_completion_by_workload", "compare_throughput",
-    "paired_bootstrap", "run_experiment", "run_paper",
-    "run_record_from_result",
+    "RegimeCell", "RegimeReport", "RunRecord", "SweepReport", "TraceRef",
+    "bootstrap_mean_ci", "compare_completion_by_workload",
+    "compare_throughput", "paired_bootstrap", "regime_spec",
+    "run_experiment", "run_paper", "run_record_from_result", "run_regimes",
 ]

@@ -3,18 +3,23 @@
 Subcommands::
 
     generate   synthesize a trace (preset or custom knobs) to a JSONL file
+    import     convert a SWIM/Facebook-format cluster log to repro-trace/v1
     run        sweep a (trace x cluster x scheduler x seeds) grid, cached
     compare    run two schedulers on the same grid, paired-bootstrap stats
+    regimes    fleet-scale preset x cluster-shape atlas (regime report)
     paper      reproduce the paper's §5 evaluation and check its claims
 
 Examples::
 
     PYTHONPATH=src python -m repro.experiments generate --preset bursty \
         --seed 0 --out traces/bursty.jsonl
+    PYTHONPATH=src python -m repro.experiments import --log cluster.tsv \
+        --out traces/cluster.jsonl
     PYTHONPATH=src python -m repro.experiments run --trace traces/bursty.jsonl \
         --schedulers proposed fair --seeds 0:3 --machines 20 --vms 2
     PYTHONPATH=src python -m repro.experiments compare --preset mix_small \
         --a proposed --b fair --seeds 0:5
+    PYTHONPATH=src python -m repro.experiments regimes --quick
     PYTHONPATH=src python -m repro.experiments paper --quick
 """
 from __future__ import annotations
@@ -26,12 +31,15 @@ from pathlib import Path
 from typing import List, Tuple
 
 from repro.core.types import ClusterSpec
+from repro.experiments import regimes as regimes_mod
 from repro.experiments.paperfig import (FULL_SEEDS, QUICK_SEEDS, run_paper)
 from repro.experiments.runner import (ExperimentSpec, TraceRef, run_experiment)
 from repro.experiments.stats import (compare_completion_by_workload,
                                      compare_deadlines, compare_throughput)
+from repro.simcluster.largescale import FLEET_SHAPES
 from repro.simcluster.traces import (PRESETS, Trace, TraceConfig,
-                                     generate_trace, paper_trace)
+                                     TraceImportError, generate_trace,
+                                     import_swim_file, paper_trace)
 
 DEFAULT_CACHE = Path(".exp-cache")
 
@@ -108,6 +116,74 @@ def cmd_generate(args) -> int:
           f"{trace.duration():.0f}s, {trace.total_input_gb():.1f} GB total "
           f"({counts})")
     return 0
+
+
+def cmd_import(args) -> int:
+    try:
+        trace = import_swim_file(
+            args.log,
+            **({"name": args.name} if args.name else {}),
+            deadline_slack=args.deadline_slack,
+            skew=args.skew,
+            max_jobs=args.max_jobs)
+    except TraceImportError as e:
+        raise SystemExit(f"import failed: {e}")
+    path = trace.save(args.out)
+    counts = ", ".join(f"{w}:{c}" for w, c in
+                       sorted(trace.workload_counts().items()))
+    print(f"imported {args.log} -> {path}: {len(trace.jobs)} jobs over "
+          f"{trace.duration():.0f}s, {trace.total_input_gb():.1f} GB total "
+          f"({counts})")
+    return 0
+
+
+def cmd_regimes(args) -> int:
+    presets = tuple(args.presets)
+    for p in presets:
+        if p not in PRESETS:
+            raise SystemExit(f"unknown preset {p!r}; available: "
+                             f"{', '.join(sorted(PRESETS))}")
+    shapes = tuple(args.shapes) if args.shapes is not None else (
+        regimes_mod.QUICK_SHAPES if args.quick else regimes_mod.FULL_SHAPES)
+    for s in shapes:
+        if s not in FLEET_SHAPES:
+            raise SystemExit(f"unknown shape {s!r}; available: "
+                             f"{', '.join(FLEET_SHAPES)}")
+    seeds = (_parse_seeds(args.seeds) if args.seeds is not None
+             else (regimes_mod.QUICK_SEEDS if args.quick
+                   else regimes_mod.FULL_SEEDS))
+    report = regimes_mod.run_regimes(
+        presets, shapes, seeds, args.cache, workers=args.workers,
+        progress=print if args.verbose else None)
+    out = report.save_json(args.out)
+    print(report.format())
+    print(f"regime report -> {out}")
+    if args.markdown is not None:
+        md = Path(args.markdown)
+        md.parent.mkdir(parents=True, exist_ok=True)
+        _write_markdown_table(md, report.to_markdown())
+        print(f"markdown table -> {md}")
+    return 0
+
+
+MD_TABLE_START = "<!-- regimes:table:start"
+MD_TABLE_END = "<!-- regimes:table:end -->"
+
+
+def _write_markdown_table(md: Path, table: str) -> None:
+    """Write the regime table to ``md``.  If the file already exists and
+    carries the ``regimes:table`` markers (the committed EXPERIMENTS.md
+    does), only the marked section is replaced — regenerating the atlas
+    must not clobber the surrounding narrative."""
+    if md.exists():
+        text = md.read_text()
+        start = text.find(MD_TABLE_START)
+        end = text.find(MD_TABLE_END)
+        if start != -1 and end != -1 and end > start:
+            head = text[:text.index("\n", start) + 1]   # keep the marker line
+            md.write_text(head + table + "\n" + text[end:])
+            return
+    md.write_text(table + "\n")
 
 
 def _print_records(report) -> None:
@@ -189,6 +265,22 @@ def main(argv=None) -> int:
     g.add_argument("--out", type=Path, required=True)
     g.set_defaults(func=cmd_generate)
 
+    im = sub.add_parser("import",
+                        help="convert a SWIM-format cluster log to "
+                             "repro-trace/v1 JSONL")
+    im.add_argument("--log", type=Path, required=True,
+                    help="SWIM/Facebook-format log: job_id submit_time gap "
+                         "input_bytes shuffle_bytes output_bytes per line")
+    im.add_argument("--out", type=Path, required=True)
+    im.add_argument("--name", default=None,
+                    help="trace name (default: log file stem)")
+    im.add_argument("--deadline-slack", type=float, default=2.2)
+    im.add_argument("--skew", type=float, default=1.0,
+                    help="VM-level placement skew applied at replay")
+    im.add_argument("--max-jobs", type=int, default=None,
+                    help="import at most this many rows")
+    im.set_defaults(func=cmd_import)
+
     r = sub.add_parser("run", help="run a sweep grid (cached)")
     _add_grid_args(r)
     r.add_argument("--schedulers", nargs="+", default=["proposed", "fair"])
@@ -203,6 +295,30 @@ def main(argv=None) -> int:
     c.add_argument("--name", default="compare")
     c.add_argument("--verbose", action="store_true")
     c.set_defaults(func=cmd_compare)
+
+    rg = sub.add_parser("regimes",
+                        help="fleet-scale regime atlas: presets x cluster "
+                             "shapes x {proposed, fair, fifo}")
+    rg.add_argument("--quick", action="store_true",
+                    help=f"sub-grid: shapes {regimes_mod.QUICK_SHAPES}, "
+                         f"seeds {regimes_mod.QUICK_SEEDS} (cache-compatible "
+                         "with the full atlas)")
+    rg.add_argument("--presets", nargs="+",
+                    default=list(regimes_mod.REGIME_PRESETS))
+    rg.add_argument("--shapes", nargs="+", default=None,
+                    help="cluster shapes: " + ", ".join(FLEET_SHAPES))
+    rg.add_argument("--seeds", nargs="+", default=None,
+                    help="paired seeds; accepts `a:b` ranges")
+    rg.add_argument("--cache", type=Path, default=DEFAULT_CACHE)
+    rg.add_argument("--workers", type=int, default=0)
+    rg.add_argument("--out", type=Path, default=Path("regimes.json"),
+                    help="machine-readable regime report (default: "
+                         "regimes.json)")
+    rg.add_argument("--markdown", type=Path, default=None,
+                    help="also write the markdown regime table here "
+                         "(e.g. EXPERIMENTS.md)")
+    rg.add_argument("--verbose", action="store_true")
+    rg.set_defaults(func=cmd_regimes)
 
     p = sub.add_parser("paper", help="reproduce the paper's §5 evaluation")
     p.add_argument("--quick", action="store_true",

@@ -1,0 +1,237 @@
+"""Regime atlas: where does the reconfiguration mechanism actually win?
+
+The paper's headline (~12% throughput over Fair) is one point: one 20-machine
+cluster, one job mix.  This module sweeps the proposed scheduler against the
+Fair and FIFO baselines over the synthetic workload regimes (heavy-tailed
+sizes, diurnal arrivals, flash-crowd bursts, shuffle-heavy mixes) crossed
+with cluster shapes from the paper's 20x2 up to fleet scale, with ≥8 paired
+seeds per cell, and emits a machine-readable *regime report*: per-regime
+throughput-gain CIs, win rates, and locality/deadline deltas.
+
+Job counts scale with the fleet (num_jobs × machines/20) so a 100-machine
+cell faces proportional load, and every (trace seed, placement, jitter) draw
+is shared by all three schedulers — the comparisons isolate pure policy.
+
+Everything runs through the cached sweep runner: re-running a finished atlas
+performs zero new simulations, and `--quick` is a sub-grid of the full atlas
+so a later full run reuses its cells.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.experiments regimes --quick
+    PYTHONPATH=src python -m repro.experiments regimes --workers 4 \
+        --markdown EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Sequence, Tuple, Union
+
+from repro.experiments.runner import ExperimentSpec, TraceRef, run_experiment
+from repro.experiments.stats import PairedComparison, compare_throughput
+from repro.simcluster.largescale import FLEET_SHAPES, fleet_shape
+from repro.simcluster.traces import PRESETS
+
+REGIME_PRESETS: Tuple[str, ...] = ("heavy_tail", "diurnal", "bursty",
+                                   "shuffle_heavy")
+FULL_SHAPES: Tuple[str, ...] = ("20x2", "50x2", "100x2")
+QUICK_SHAPES: Tuple[str, ...] = ("20x2", "50x2")
+FULL_SEEDS: Tuple[int, ...] = tuple(range(8))
+QUICK_SEEDS: Tuple[int, ...] = (0, 1)
+SCHEDULERS: Tuple[str, ...] = ("proposed", "fair", "fifo")
+REPORT_VERSION = 1
+
+
+def scaled_jobs(preset: str, machines: int) -> int:
+    """Scale a preset's job count with the fleet (baseline: 20 machines)."""
+    base = PRESETS[preset].num_jobs
+    return max(base, round(base * machines / 20))
+
+
+def regime_spec(preset: str, shape: str,
+                seeds: Sequence[int] = FULL_SEEDS) -> ExperimentSpec:
+    """One atlas cell as a sweep spec: scaled preset trace x shape x all
+    three schedulers, trace seed coupled to the sim seed (every replication
+    re-rolls arrivals and placements for *all* schedulers alike)."""
+    machines, _ = FLEET_SHAPES[shape]
+    config = dataclasses.replace(PRESETS[preset],
+                                 num_jobs=scaled_jobs(preset, machines))
+    return ExperimentSpec(
+        name=f"regime-{preset}-{shape}",
+        traces=(TraceRef(config=config),),
+        clusters=(fleet_shape(shape),),
+        schedulers=SCHEDULERS,
+        seeds=tuple(seeds),
+    )
+
+
+@dataclass
+class RegimeCell:
+    """Verdict for one (workload regime, cluster shape) point of the atlas."""
+
+    preset: str
+    shape: str
+    machines: int
+    vms: int
+    num_jobs: int
+    seeds: Tuple[int, ...]
+    vs_fair: PairedComparison            # proposed-vs-fair throughput
+    vs_fifo: PairedComparison            # proposed-vs-fifo throughput
+    locality: Dict[str, float]           # mean locality rate per scheduler
+    deadline_frac: Dict[str, float]      # mean deadlines-met / jobs per run
+    mean_makespan: Dict[str, float]
+
+    def verdict(self) -> str:
+        """'win' / 'loss' when the proposed-vs-fair 95% CI excludes zero,
+        else 'tie'."""
+        if self.vs_fair.ci_lo_pct > 0:
+            return "win"
+        if self.vs_fair.ci_hi_pct < 0:
+            return "loss"
+        return "tie"
+
+    def locality_delta_pp(self) -> float:
+        """Locality-rate gain of proposed over fair, percentage points."""
+        return (self.locality["proposed"] - self.locality["fair"]) * 100.0
+
+    def deadline_delta_pp(self) -> float:
+        """Deadlines-met-fraction gain of proposed over fair, pp."""
+        return (self.deadline_frac["proposed"]
+                - self.deadline_frac["fair"]) * 100.0
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "preset": self.preset,
+            "shape": self.shape,
+            "machines": self.machines,
+            "vms": self.vms,
+            "num_jobs": self.num_jobs,
+            "seeds": list(self.seeds),
+            "verdict": self.verdict(),
+            "throughput_vs_fair": self.vs_fair.to_dict(),
+            "throughput_vs_fifo": self.vs_fifo.to_dict(),
+            "locality": self.locality,
+            "locality_delta_pp": self.locality_delta_pp(),
+            "deadline_frac": self.deadline_frac,
+            "deadline_delta_pp": self.deadline_delta_pp(),
+            "mean_makespan": self.mean_makespan,
+        }
+
+
+@dataclass
+class RegimeReport:
+    presets: Tuple[str, ...]
+    shapes: Tuple[str, ...]
+    seeds: Tuple[int, ...]
+    cells: List[RegimeCell]
+    simulated: int
+    cached: int
+    version: int = REPORT_VERSION
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "version": self.version,
+            "presets": list(self.presets),
+            "shapes": list(self.shapes),
+            "seeds": list(self.seeds),
+            "schedulers": list(SCHEDULERS),
+            "simulated": self.simulated,
+            "cached": self.cached,
+            "cells": [c.to_dict() for c in self.cells],
+        }
+
+    def save_json(self, path: Union[str, Path]) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_dict(), indent=2, sort_keys=True)
+                        + "\n")
+        return path
+
+    # -- human-readable views -----------------------------------------------
+    def format(self) -> str:
+        lines = [f"== regime atlas: proposed vs fair/fifo "
+                 f"({len(self.seeds)} paired seeds/cell; "
+                 f"{self.simulated} simulated, {self.cached} cached) =="]
+        for c in self.cells:
+            g = c.vs_fair
+            lines.append(
+                f"  {c.preset:13s} {c.shape:6s} ({c.num_jobs:3d} jobs)  "
+                f"vs fair {g.mean_gain_pct:+6.1f}% "
+                f"[{g.ci_lo_pct:+6.1f}%, {g.ci_hi_pct:+6.1f}%] "
+                f"win {g.win_rate:4.0%}  "
+                f"Δlocal {c.locality_delta_pp():+5.1f}pp  "
+                f"Δddl {c.deadline_delta_pp():+5.1f}pp  -> {c.verdict()}")
+        return "\n".join(lines)
+
+    def to_markdown(self) -> str:
+        head = [
+            "| regime | cluster | jobs | tput gain vs fair (95% CI) | win "
+            "rate | tput gain vs fifo | Δ locality | Δ deadlines | verdict |",
+            "| --- | --- | ---: | --- | ---: | --- | ---: | ---: | --- |",
+        ]
+        rows = []
+        for c in self.cells:
+            f, o = c.vs_fair, c.vs_fifo
+            rows.append(
+                f"| {c.preset} | {c.shape} | {c.num_jobs} "
+                f"| {f.mean_gain_pct:+.1f}% [{f.ci_lo_pct:+.1f}%, "
+                f"{f.ci_hi_pct:+.1f}%] | {f.win_rate:.0%} "
+                f"| {o.mean_gain_pct:+.1f}% [{o.ci_lo_pct:+.1f}%, "
+                f"{o.ci_hi_pct:+.1f}%] | {c.locality_delta_pp():+.1f} pp "
+                f"| {c.deadline_delta_pp():+.1f} pp | {c.verdict()} |")
+        return "\n".join(head + rows)
+
+
+def _mean(vals: Sequence[float]) -> float:
+    return sum(vals) / len(vals) if vals else 0.0
+
+
+def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
+                shapes: Sequence[str] = FULL_SHAPES,
+                seeds: Sequence[int] = FULL_SEEDS,
+                cache_dir: Union[str, Path] = ".exp-cache",
+                *, workers: int = 0, n_boot: int = 2000,
+                progress=None) -> RegimeReport:
+    """Run (or re-serve from cache) the full atlas grid and distill the
+    per-regime verdicts."""
+    cells: List[RegimeCell] = []
+    simulated = cached = 0
+    for preset in presets:
+        for shape in shapes:
+            spec = regime_spec(preset, shape, seeds)
+            report = run_experiment(spec, cache_dir, workers=workers,
+                                    progress=progress)
+            simulated += report.simulated
+            cached += report.cached
+            by = report.by_scheduler()
+            machines, vms = FLEET_SHAPES[shape]
+            cells.append(RegimeCell(
+                preset=preset,
+                shape=shape,
+                machines=machines,
+                vms=vms,
+                num_jobs=scaled_jobs(preset, machines),
+                seeds=tuple(seeds),
+                vs_fair=compare_throughput(by["fair"], by["proposed"],
+                                           n_boot=n_boot),
+                vs_fifo=compare_throughput(by["fifo"], by["proposed"],
+                                           n_boot=n_boot),
+                locality={s: _mean([r.locality_rate for r in rs])
+                          for s, rs in by.items()},
+                deadline_frac={
+                    s: _mean([r.deadlines_met / r.jobs_total for r in rs
+                              if r.jobs_total])
+                    for s, rs in by.items()},
+                mean_makespan={s: _mean([r.makespan for r in rs])
+                               for s, rs in by.items()},
+            ))
+            if progress:
+                c = cells[-1]
+                progress(f"[{preset}/{shape}] vs fair "
+                         f"{c.vs_fair.mean_gain_pct:+.1f}% -> {c.verdict()}")
+    return RegimeReport(presets=tuple(presets), shapes=tuple(shapes),
+                        seeds=tuple(seeds), cells=cells,
+                        simulated=simulated, cached=cached)

@@ -33,7 +33,8 @@ from repro.experiments.metrics import RunRecord, run_record_from_result
 from repro.simcluster.largescale import build_scheduler
 from repro.simcluster.sim import ClusterSim
 from repro.simcluster.traces import (PRESETS, Trace, TraceConfig, _dumps,
-                                     generate_trace, paper_trace)
+                                     generate_trace, paper_trace,
+                                     trace_from_rows)
 
 CACHE_VERSION = 1
 SCHEDULERS = ("proposed", "fair", "fifo")
@@ -41,21 +42,25 @@ SCHEDULERS = ("proposed", "fair", "fifo")
 
 @dataclass(frozen=True)
 class TraceRef:
-    """Reference to a trace: a JSONL file, a named preset, or an inline
-    ``TraceConfig``.  ``seed`` pins the trace seed; ``None`` couples it to
-    each cell's sim seed (fresh placements per replication — the paper
+    """Reference to a trace: a JSONL file, a named preset, an inline
+    ``TraceConfig``, or explicit ``rows`` (a hand-built mix, as accepted by
+    ``trace_from_rows``).  ``seed`` pins the trace seed; ``None`` couples it
+    to each cell's sim seed (fresh placements per replication — the paper
     evaluation re-rolls placement every trial)."""
 
     path: Optional[str] = None
     preset: Optional[str] = None
     config: Optional[TraceConfig] = None
+    rows: Optional[Tuple[Tuple[str, float, float, float], ...]] = None
+    name: str = "rows"                  # trace name for the rows kind
     seed: Optional[int] = None
 
     def __post_init__(self) -> None:
-        given = sum(x is not None for x in (self.path, self.preset, self.config))
+        given = sum(x is not None for x in (self.path, self.preset,
+                                            self.config, self.rows))
         if given != 1:
             raise ValueError(
-                "exactly one of path / preset / config must be given")
+                "exactly one of path / preset / config / rows must be given")
         if self.preset is not None and self.preset != "paper" \
                 and self.preset not in PRESETS:
             raise ValueError(f"unknown preset {self.preset!r}; available: "
@@ -69,6 +74,8 @@ class TraceRef:
             return paper_trace(tseed)
         if self.preset is not None:
             return generate_trace(PRESETS[self.preset], tseed)
+        if self.rows is not None:
+            return trace_from_rows(self.name, self.rows, seed=tseed)
         return generate_trace(self.config, tseed)
 
     def descriptor(self) -> Dict[str, object]:
@@ -80,6 +87,9 @@ class TraceRef:
         seed = self.seed if self.seed is not None else "=sim_seed"
         if self.preset is not None:
             return {"kind": "preset", "preset": self.preset, "seed": seed}
+        if self.rows is not None:
+            return {"kind": "rows", "name": self.name,
+                    "rows": [list(r) for r in self.rows], "seed": seed}
         return {"kind": "config", "config": self.config.to_dict(),
                 "seed": seed}
 

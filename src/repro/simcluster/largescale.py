@@ -116,6 +116,27 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
 ]}
 
 
+# Cluster shapes for the regime atlas (experiments/regimes.py): the paper's
+# 20x2 up to fleet scale.  Replication 1 matches the calibrated paper setting
+# (per-VM virtual disks); the scenario suite above keeps replication 3 for
+# the HDFS-default stress runs.
+FLEET_SHAPES: Dict[str, Tuple[int, int]] = {
+    "20x2": (20, 2),
+    "50x2": (50, 2),
+    "100x2": (100, 2),
+}
+
+
+def fleet_shape(name: str, replication: int = 1) -> ClusterSpec:
+    """``ClusterSpec`` for a named ``MxV`` shape from ``FLEET_SHAPES``."""
+    if name not in FLEET_SHAPES:
+        raise ValueError(f"unknown fleet shape {name!r}; available: "
+                         f"{', '.join(FLEET_SHAPES)}")
+    machines, vms = FLEET_SHAPES[name]
+    return ClusterSpec(num_machines=machines, vms_per_machine=vms,
+                       replication=replication)
+
+
 def build_scheduler(kind: str, spec: ClusterSpec, *, legacy: bool = False):
     """Scheduler factory over both engines (``legacy`` = frozen seed code)."""
     if legacy:

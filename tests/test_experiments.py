@@ -104,6 +104,26 @@ def test_worker_pool_matches_inline(tmp_path):
         == [strip_wall(r) for r in inline.records]
 
 
+def test_rows_trace_ref_resolves_and_caches(tmp_path):
+    """The rows kind (hand-built mixes, e.g. the Fig.-2 grid) flows through
+    the cache like any other trace and re-rolls placement per sim seed."""
+    rows = (("sort", 2.0, 400.0, 0.0), ("grep", 1.0, 300.0, 10.0))
+    ref = TraceRef(rows=rows, name="mini")
+    t0, t1 = ref.resolve(0), ref.resolve(1)
+    assert [j.job_id for j in t0.jobs] == ["mini-0000-sort", "mini-0001-grep"]
+    assert t0.jobs[0].placement_seed != t1.jobs[0].placement_seed
+    assert ref.descriptor()["kind"] == "rows"
+    spec = ExperimentSpec(
+        name="rows", traces=(ref,),
+        clusters=(ClusterSpec(num_machines=4, vms_per_machine=2,
+                              replication=1),),
+        schedulers=("fair",), seeds=(0, 1))
+    assert run_experiment(spec, tmp_path).simulated == 2
+    assert run_experiment(spec, tmp_path).simulated == 0
+    with pytest.raises(ValueError, match="exactly one of"):
+        TraceRef(rows=rows, preset="mix_small")
+
+
 def test_paired_runs_share_trace(tmp_path):
     """Both schedulers of one seed must see the identical job list."""
     report = run_experiment(_small_spec(seeds=(0,)), tmp_path)

@@ -1,0 +1,242 @@
+"""Scheduler/simulator invariant property tests.
+
+The incremental indices (per-job pending sets, per-node local counters,
+global pending-work counters, maintained EDF/Fair orders) are redundant
+views of ground-truth state.  These tests run random scenarios through an
+instrumented simulator that, at every heartbeat, recomputes each view from
+scratch and asserts the incremental copy agrees — so a silently drifting
+counter fails loudly instead of skewing scheduling decisions.
+
+Invariants checked on every run:
+
+* **launch-once** — a task never launches twice through the select /
+  speculation paths.  The single sanctioned exception, inherited from the
+  seed engine and pinned by the parity suite: a *parked* task that also
+  launched through the direct local path can be re-launched once by its
+  stale reconfiguration plug (``via_reconfig=True``); any other duplicate
+  is a bug.  Speculative duplicates are capped at one per task.
+* **slot caps** — per-VM running maps never exceed the live vCPU count
+  (reconfiguration moves the cap, never below the occupancy), running
+  reduces never exceed the configured reduce slots.
+* **counter recounts** — ``total_pending_maps``, ``ready_pending_reduces``
+  and the per-node ``local_pending_count`` (behind ``has_local_pending``)
+  equal a from-scratch recount; the ``map_done`` / ``all_done`` /
+  ``has_progress`` flag mirrors equal their defining properties; the
+  active-jobs dict holds exactly the unfinished jobs.
+* **order maintenance** — the proposed scheduler's incremental EDF list
+  equals a full stable re-sort of the active jobs; the Fair scheduler's
+  in-select deficit reinsertion keeps its entries list exactly sorted.
+
+The final test injects an off-by-one into the pending-map counter and
+asserts the recount catches it — the detection property itself is pinned.
+"""
+import bisect
+import random
+
+import pytest
+
+from repro.core.baselines import FairScheduler
+from repro.core.scheduler import CompletionTimeScheduler, SchedulerBase
+from repro.simcluster.sim import ClusterSim
+from test_parity_fuzz import build_scenario, _schedulers
+
+N_RUNS = 12                       # random scenarios per scheduler-agnostic run
+
+
+class InvariantViolation(AssertionError):
+    pass
+
+
+class InvariantCheckedSim(ClusterSim):
+    """ClusterSim that audits the incremental state at every transition."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._primary_seen = set()
+        self._reconfig_relaunches = set()
+        self._spec_seen = set()
+        self._ever_parked = set()
+        self.heartbeats_checked = 0
+
+    # -- launch-once + slot caps ------------------------------------------
+    def _launch(self, launch, now, speculative=False):
+        task = launch.task
+        if speculative:
+            if task in self._spec_seen:
+                raise InvariantViolation(f"speculative duplicate: {task}")
+            self._spec_seen.add(task)
+        elif task in self._primary_seen:
+            if not launch.via_reconfig:
+                raise InvariantViolation(
+                    f"task launched twice outside reconfig: {task}")
+            if task not in self._ever_parked:
+                raise InvariantViolation(
+                    f"reconfig re-launch of a never-parked task: {task}")
+            if task in self._reconfig_relaunches:
+                raise InvariantViolation(
+                    f"task re-launched more than once via reconfig: {task}")
+            self._reconfig_relaunches.add(task)
+        else:
+            self._primary_seen.add(task)
+        super()._launch(launch, now, speculative)
+        self._check_slot_caps(launch.node)
+
+    def _check_slot_caps(self, node):
+        cap = self.map_capacity(node)
+        if len(self.map_running[node]) > cap:
+            raise InvariantViolation(
+                f"node {node}: {len(self.map_running[node])} running maps "
+                f"> capacity {cap}")
+        if len(self.red_running[node]) > self.spec.base_reduce_slots:
+            raise InvariantViolation(
+                f"node {node}: {len(self.red_running[node])} running reduces "
+                f"> {self.spec.base_reduce_slots} slots")
+
+    # -- per-heartbeat recounts -------------------------------------------
+    def _heartbeat(self, node, now):
+        if self.reconfig is not None:
+            # parked set snapshot before expiry/matching can drain it
+            self._ever_parked.update(self.sched.parked)
+        self._check_counters()
+        self.heartbeats_checked += 1
+        super()._heartbeat(node, now)
+
+    def _check_counters(self):
+        sched = self.sched
+        spec = self.spec
+        jobs = sched.jobs.values()
+        expect_total = sum(len(j.pending_map) for j in jobs)
+        if sched.total_pending_maps != expect_total:
+            raise InvariantViolation(
+                f"total_pending_maps={sched.total_pending_maps} != "
+                f"recount {expect_total}")
+        expect_ready = sum(len(j.pending_reduce) for j in jobs if j.map_done)
+        if sched.ready_pending_reduces != expect_ready:
+            raise InvariantViolation(
+                f"ready_pending_reduces={sched.ready_pending_reduces} != "
+                f"recount {expect_ready}")
+        counts = [0] * spec.num_nodes
+        for j in jobs:
+            placement = j.spec.block_placement
+            for idx in j.pending_map:
+                for n in set(placement[idx]):
+                    counts[n] += 1
+        if sched.local_pending_count != counts:
+            diff = [(n, sched.local_pending_count[n], counts[n])
+                    for n in range(spec.num_nodes)
+                    if sched.local_pending_count[n] != counts[n]]
+            raise InvariantViolation(
+                f"local_pending_count drift (node, have, want): {diff[:5]}")
+        for n in range(spec.num_nodes):
+            if sched.has_local_pending(n) != (counts[n] > 0):
+                raise InvariantViolation(f"has_local_pending({n}) wrong")
+        for jid, j in sched.jobs.items():
+            if j.map_done != j.map_finished:
+                raise InvariantViolation(f"{jid}: map_done flag drift")
+            if j.all_done != j.finished:
+                raise InvariantViolation(f"{jid}: all_done flag drift")
+            if j.has_progress != j.started:
+                raise InvariantViolation(f"{jid}: has_progress flag drift")
+            if (jid in sched.active) != (not j.all_done):
+                raise InvariantViolation(f"{jid}: active-set membership drift")
+        if isinstance(sched, CompletionTimeScheduler):
+            expect_edf = sorted((j.absolute_deadline, j.seq, j.spec.job_id)
+                                for j in sched.active.values())
+            if sched._edf != expect_edf:
+                raise InvariantViolation("EDF order != full re-sort")
+            if [e[2] for e in sched._edf] != [j.spec.job_id
+                                              for j in sched._edf_jobs]:
+                raise InvariantViolation("_edf_jobs misaligned with _edf")
+
+
+def run_checked(scenario_seed: int, scheduler: str = None):
+    sc = build_scenario(random.Random(scenario_seed))
+    if scheduler is not None:
+        sc["scheduler"] = scheduler
+    sched, _ = _schedulers(sc)
+    sim = InvariantCheckedSim(
+        sc["spec"], sched, seed=sc["sim_seed"],
+        straggler_prob=sc["straggler_prob"],
+        straggler_factor=sc["straggler_factor"],
+        speculative=sc["speculative"],
+        speculation_threshold=sc["speculation_threshold"])
+    result = sim.run(sc["jobs"])
+    assert sim.heartbeats_checked > 0
+    return sim, result
+
+
+@pytest.mark.parametrize("scheduler", ["proposed", "fair", "fifo"])
+def test_invariants_hold_on_random_runs(scheduler):
+    for k in range(N_RUNS):
+        run_checked(424200 + k, scheduler)
+
+
+def test_invariants_hold_under_heavy_stragglers():
+    """Speculation churn (duplicates, cancellations, refreshed queue entries)
+    must not corrupt the pending counters."""
+    sc = build_scenario(random.Random(777))
+    sc.update(scheduler="proposed", straggler_prob=0.3, speculative=True,
+              speculation_threshold=1.5)
+    sched, _ = _schedulers(sc)
+    sim = InvariantCheckedSim(sc["spec"], sched, seed=3, straggler_prob=0.3,
+                              speculative=True, speculation_threshold=1.5)
+    sim.run(sc["jobs"])
+    assert sim.heartbeats_checked > 0
+
+
+def test_fair_incremental_order_matches_resort(monkeypatch):
+    """Fair keeps its deficit order by popping the launched job and
+    re-inserting with one bisect; wrap insort to pin 'list stays exactly
+    sorted' at every reinsertion."""
+    calls = {"n": 0}
+    real_insort = bisect.insort
+
+    def checked_insort(lst, item, *args, **kwargs):
+        real_insort(lst, item, *args, **kwargs)
+        if lst != sorted(lst):
+            raise InvariantViolation("fair deficit list unsorted after insort")
+        calls["n"] += 1
+
+    import repro.core.baselines as baselines
+    monkeypatch.setattr(baselines.bisect, "insort", checked_insort)
+    for k in range(4):
+        sim, result = run_checked(515100 + k, "fair")
+        assert all(j.finish_time is not None for j in result.jobs.values())
+    assert calls["n"] > 0            # the instrumented path actually ran
+
+
+def test_injected_pending_counter_bug_is_caught(monkeypatch):
+    """Acceptance check: a deliberate off-by-one in the pending-map counter
+    must be flagged by the recount — the detection property itself is a
+    regression test, not a one-off manual experiment."""
+    real_drop = SchedulerBase._drop_pending_map
+    state = {"calls": 0}
+
+    def buggy_drop(self, job, idx):
+        out = real_drop(self, job, idx)
+        state["calls"] += 1
+        if out and state["calls"] == 7:
+            self.total_pending_maps -= 1          # the injected off-by-one
+        return out
+
+    monkeypatch.setattr(SchedulerBase, "_drop_pending_map", buggy_drop)
+    with pytest.raises(InvariantViolation, match="total_pending_maps"):
+        run_checked(424242, "fair")
+
+
+def test_injected_local_counter_bug_is_caught(monkeypatch):
+    """Same for the per-node locality counters behind has_local_pending."""
+    real_drop = SchedulerBase._drop_pending_map
+    state = {"calls": 0}
+
+    def buggy_drop(self, job, idx):
+        out = real_drop(self, job, idx)
+        state["calls"] += 1
+        if out and state["calls"] == 3:
+            placement = job.spec.block_placement[idx]
+            self.local_pending_count[next(iter(placement))] += 1
+        return out
+
+    monkeypatch.setattr(SchedulerBase, "_drop_pending_map", buggy_drop)
+    with pytest.raises(InvariantViolation, match="local_pending_count"):
+        run_checked(424242, "proposed")

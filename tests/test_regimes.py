@@ -1,0 +1,79 @@
+"""Regime atlas: spec construction, report distillation, caching, rendering.
+
+Full-size atlas cells are exercised by `python -m repro.experiments regimes
+--quick` (and the committed EXPERIMENTS.md); here a small preset at the
+smallest shape keeps the property checks fast.
+"""
+import json
+
+import pytest
+
+from repro.experiments.regimes import (FULL_SHAPES, QUICK_SEEDS, QUICK_SHAPES,
+                                       REGIME_PRESETS, SCHEDULERS,
+                                       RegimeReport, regime_spec, run_regimes,
+                                       scaled_jobs)
+from repro.simcluster.largescale import FLEET_SHAPES, fleet_shape
+from repro.simcluster.traces import PRESETS
+
+
+def test_atlas_grid_covers_acceptance_floor():
+    """≥4 presets x ≥2 shapes x 3 schedulers x ≥8 paired seeds."""
+    assert len(REGIME_PRESETS) >= 4
+    assert len(QUICK_SHAPES) >= 2 and len(FULL_SHAPES) >= 3
+    assert set(SCHEDULERS) == {"proposed", "fair", "fifo"}
+    from repro.experiments.regimes import FULL_SEEDS
+    assert len(FULL_SEEDS) >= 8
+    assert set(QUICK_SHAPES) <= set(FULL_SHAPES)   # quick is a sub-grid
+    assert set(QUICK_SEEDS) <= set(FULL_SEEDS)
+
+
+def test_scaled_jobs_tracks_fleet_size():
+    assert scaled_jobs("heavy_tail", 20) == PRESETS["heavy_tail"].num_jobs
+    assert scaled_jobs("heavy_tail", 100) == 5 * PRESETS["heavy_tail"].num_jobs
+    assert scaled_jobs("heavy_tail", 10) == PRESETS["heavy_tail"].num_jobs
+
+
+def test_fleet_shape_lookup():
+    spec = fleet_shape("50x2")
+    assert (spec.num_machines, spec.vms_per_machine) == (50, 2)
+    assert spec.replication == 1
+    with pytest.raises(ValueError, match="unknown fleet shape"):
+        fleet_shape("30x7")
+
+
+def test_regime_spec_pairs_all_schedulers():
+    spec = regime_spec("bursty", "20x2", seeds=(0, 1))
+    assert spec.schedulers == SCHEDULERS
+    assert spec.n_cells() == 1 * 1 * 3 * 2
+    # trace seed coupled to sim seed: placements re-roll per replication
+    ref = spec.traces[0]
+    assert ref.seed is None
+    assert ref.config.num_jobs == scaled_jobs("bursty", 20)
+
+
+def test_run_regimes_report_and_cache(tmp_path):
+    report = run_regimes(presets=("mix_small",), shapes=("20x2",),
+                         seeds=(0, 1), cache_dir=tmp_path / "cache",
+                         n_boot=200)
+    assert report.simulated == 6 and report.cached == 0
+    (cell,) = report.cells
+    assert cell.verdict() in ("win", "loss", "tie")
+    assert cell.vs_fair.n_pairs == 2 and cell.vs_fifo.n_pairs == 2
+    assert set(cell.locality) == set(SCHEDULERS)
+    assert all(0.0 <= v <= 1.0 for v in cell.deadline_frac.values())
+    # rerun: pure cache hit
+    again = run_regimes(presets=("mix_small",), shapes=("20x2",),
+                        seeds=(0, 1), cache_dir=tmp_path / "cache",
+                        n_boot=200)
+    assert again.simulated == 0 and again.cached == 6
+    assert again.cells[0].to_dict() == cell.to_dict()
+    # machine-readable report round-trips through JSON
+    out = report.save_json(tmp_path / "report.json")
+    loaded = json.loads(out.read_text())
+    assert loaded["cells"][0]["throughput_vs_fair"]["ci_lo_pct"] \
+        <= loaded["cells"][0]["throughput_vs_fair"]["ci_hi_pct"]
+    assert loaded["cells"][0]["verdict"] == cell.verdict()
+    # renders
+    assert "vs fair" in report.format()
+    md = report.to_markdown()
+    assert md.startswith("| regime |") and "mix_small" in md

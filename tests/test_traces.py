@@ -1,15 +1,21 @@
-"""Trace generation determinism, JSONL round-trip, and replay."""
+"""Trace generation determinism, JSONL round-trip, replay, and the SWIM
+cluster-log importer."""
 import json
+from pathlib import Path
 
 import pytest
 
 from repro.core.types import ClusterSpec
-from repro.simcluster.traces import (PRESETS, ArrivalConfig, SizeConfig,
-                                     Trace, TraceConfig, TraceJob,
-                                     generate_trace, paper_trace,
-                                     trace_from_rows)
+from repro.simcluster.traces import (PRESETS, SWIM_SIGNATURES, ArrivalConfig,
+                                     SizeConfig, Trace, TraceConfig,
+                                     TraceImportError, TraceJob,
+                                     classify_swim_workload, generate_trace,
+                                     import_swim, import_swim_file,
+                                     paper_trace, trace_from_rows)
 from repro.simcluster.workloads import (WORKLOADS, n_map_tasks,
                                         n_reduce_tasks, paper_cluster)
+
+DATA = Path(__file__).parent / "data"
 
 
 def test_same_seed_byte_identical():
@@ -163,6 +169,96 @@ def test_size_distributions():
     assert max(pa_draws) > 10 * sorted(pa_draws)[len(pa_draws) // 2]
     with pytest.raises(ValueError):
         SizeConfig(distribution="uniform")
+
+
+# -- SWIM / Facebook-format import ------------------------------------------
+
+def test_swim_golden_file_round_trip(tmp_path):
+    """Importing the committed SWIM fixture reproduces the committed golden
+    trace byte-for-byte, and the golden itself round-trips bit-exactly."""
+    golden = DATA / "swim_small.trace.jsonl"
+    trace = import_swim_file(DATA / "swim_small.tsv")
+    assert trace.to_jsonl() == golden.read_text()
+    # import is deterministic (stable placement seeds, no ambient RNG)
+    assert import_swim_file(DATA / "swim_small.tsv").to_jsonl() \
+        == trace.to_jsonl()
+    loaded = Trace.load(golden)
+    out = tmp_path / "again.jsonl"
+    loaded.save(out)
+    assert out.read_bytes() == golden.read_bytes()
+
+
+def test_swim_import_normalizes_and_classifies():
+    trace = import_swim_file(DATA / "swim_small.tsv")
+    assert trace.jobs[0].submit_time == 0.0          # shifted to t=0
+    times = [j.submit_time for j in trace.jobs]
+    assert times == sorted(times)
+    assert set(trace.workload_counts()) == set(WORKLOADS)
+    for j in trace.jobs:
+        assert 0.125 <= j.input_gb <= 64.0
+        assert j.deadline > 0
+        assert 0 <= j.placement_seed < (1 << 31)
+    # the 64 GB row was clamped to the cap
+    assert max(j.input_gb for j in trace.jobs) == 64.0
+    # replays against any cluster shape
+    spec = ClusterSpec(num_machines=4, vms_per_machine=2, replication=1)
+    for job in trace.job_specs(spec):
+        assert all(0 <= n < spec.num_nodes
+                   for p in job.block_placement for n in p)
+
+
+def test_swim_classifier_signatures():
+    """Each signature's own byte profile maps back to its workload, and the
+    classifier is total over degenerate inputs (zero bytes)."""
+    for w, (s_ratio, o_ratio) in SWIM_SIGNATURES.items():
+        inp = 2e9
+        assert classify_swim_workload(inp, inp * s_ratio, inp * o_ratio) == w
+    assert classify_swim_workload(0, 0, 0) == "grep"     # all-zero: smallest
+    assert classify_swim_workload(1e9, 10e9, 2e9) == "permutation"
+
+
+def test_swim_malformed_line_errors():
+    with pytest.raises(TraceImportError, match="line 2: expected 6"):
+        import_swim("j1\t0\t0\t1e9\t1e8\t1e7\nj2\t1\t2\t3\n")
+    with pytest.raises(TraceImportError, match="line 1: non-numeric"):
+        import_swim("j1\tzero\t0\t1e9\t1e8\t1e7\n")
+    with pytest.raises(TraceImportError, match="negative submit"):
+        import_swim("j1\t-3\t0\t1e9\t1e8\t1e7\n")
+    with pytest.raises(TraceImportError, match="negative byte count"):
+        import_swim("j1\t0\t0\t1e9\t-1\t1e7\n")
+
+
+def test_swim_empty_trace_errors():
+    with pytest.raises(TraceImportError, match="empty trace"):
+        import_swim("")
+    with pytest.raises(TraceImportError, match="empty trace"):
+        import_swim("# only comments\n\n   \n")
+
+
+def test_swim_rejects_trace_jsonl_and_wrong_version_header():
+    """Feeding an already-converted trace to the importer gives a targeted
+    error, and a version-bumped header still fails loading as a trace."""
+    trace = import_swim_file(DATA / "swim_small.tsv")
+    with pytest.raises(TraceImportError, match="looks like JSON"):
+        import_swim(trace.to_jsonl())
+    bad_header = trace.to_jsonl().replace("repro-trace/v1", "repro-trace/v9")
+    with pytest.raises(ValueError, match="unsupported trace format"):
+        Trace.from_jsonl(bad_header)
+
+
+def test_swim_import_options():
+    text = (DATA / "swim_small.tsv").read_text()
+    capped = import_swim(text, name="x", max_jobs=3)
+    assert len(capped.jobs) == 3 and capped.config["jobs_in"] == 3
+    slacked = import_swim(text, name="x", deadline_slack=4.4)
+    base = import_swim(text, name="x")
+    assert all(a.deadline > b.deadline
+               for a, b in zip(slacked.jobs, base.jobs))
+    # options land in the header config, so the cache layer (which hashes
+    # file content) distinguishes differently-imported variants
+    assert slacked.config["deadline_slack"] == 4.4
+    with pytest.raises(TraceImportError, match="cannot read"):
+        import_swim_file(DATA / "no_such_file.tsv")
 
 
 def test_config_validation():
