@@ -21,17 +21,20 @@ QUICK_OUT="$(mktemp /tmp/bench_quick.XXXXXX.json)"
 trap 'rm -f "$QUICK_OUT"' EXIT
 
 if [[ "${SKIP_TESTS:-0}" != "1" ]]; then
-    echo "== tier-1 tests (incl. fuzz parity + invariants, bounded profile) =="
     # The differential fuzz / invariant suites are part of tier-1 with a
     # deterministic bounded budget: a fixed scenario-seed base and example
-    # cap (and, when the optional hypothesis extra is installed, the
+    # caps (and, when the optional hypothesis extra is installed, the
     # derandomized `tier1` profile registered in tests/test_parity_fuzz.py).
-    # Raise REPRO_FUZZ_SCENARIOS / switch HYPOTHESIS_PROFILE=dev for deeper
-    # local exploration.
+    # Raise REPRO_FUZZ_SCENARIOS / REPRO_ADAPTIVE_FUZZ_SCENARIOS or switch
+    # HYPOTHESIS_PROFILE=dev for deeper local exploration.
     export REPRO_FUZZ_SCENARIOS="${REPRO_FUZZ_SCENARIOS:-200}"
+    export REPRO_ADAPTIVE_FUZZ_SCENARIOS="${REPRO_ADAPTIVE_FUZZ_SCENARIOS:-60}"
     export REPRO_FUZZ_SEED="${REPRO_FUZZ_SEED:-0}"
     export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-tier1}"
-    python -m pytest -x -q
+    echo "== tier-1 tests (fast suite, -m 'not fuzz') =="
+    python -m pytest -x -q -m "not fuzz"
+    echo "== fuzz profile (legacy parity x ${REPRO_FUZZ_SCENARIOS} + adaptive liveness x ${REPRO_ADAPTIVE_FUZZ_SCENARIOS}) =="
+    python -m pytest -x -q -m fuzz
 fi
 
 echo "== quick sim benchmark =="

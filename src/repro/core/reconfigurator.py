@@ -19,6 +19,33 @@ scheduler for a remote launch — the paper observes this wait is negligible
 ("tasks ... finish in less than a minute"), but an implementation must bound
 it to protect deadlines.
 
+**Pressure-adaptive mode** (``ClusterSpec.adaptive``, off by default): the
+fixed ``max_wait`` bet fails under sustained saturation — no VM ever offers
+a core, so every parked task burns its full patience before the remote
+fallback.  With ``AdaptiveConfig.enabled`` the reconfigurator additionally
+tracks, per machine and incrementally,
+
+* ``rq_depth`` — queued donor offers (mirror of ``len(rq[m])``, audited by
+  the invariant suite),
+* ``offer_ewma`` / ``last_offer`` — an EWMA over the intervals between
+  donor-core offers, fed by the simulator's release events,
+* ``free_ewma`` / ``last_free`` — the same over raw core-free events
+  (``ClusterSim`` notifies via :meth:`observe_core_free`),
+* ``fail_streak`` — consecutive park *outcomes* on the machine that ended
+  in a remote launch (the scheduler reports outcomes through
+  :meth:`note_park_outcome`): a park pays when its task eventually runs
+  data-locally — via a donor match **or** via the target node's own freed
+  slot (most parks resolve this way: the AQ entry acts as a reservation) —
+  and fails when the task burns its full patience and launches remotely
+  anyway.  A machine whose streak hits the limit stops admitting parks
+  until an offer arrives, a park pays, or ``fail_cooldown`` elapses
+  (periodic probing keeps the signal fresh),
+
+and exposes :meth:`predicted_core_wait` + :meth:`park_decision`, which the
+scheduler uses to gate park admission against a task's remote-launch
+break-even and to bound each park's patience (see ``AdaptiveConfig``).
+Disabled, every decision path is bit-exact against the legacy engine.
+
 Scaling note: ``match`` visits only machines whose AQ *and* RQ are both
 non-empty (tracked incrementally, ascending machine order — identical
 matching order to a full 0..M-1 sweep), and ``expire_stale`` keeps a global
@@ -37,11 +64,18 @@ from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 from repro.core.types import ClusterSpec, TaskId
 
 
-@dataclass
+@dataclass(eq=False)
 class ParkedTask:
+    """One AQ entry.  ``eq=False``: queue/heap bookkeeping is by identity —
+    two parks of one task at the same instant must stay distinguishable.
+
+    ``wait_bound`` is the adaptive per-park patience; ``None`` means the
+    legacy fixed ``Reconfigurator.max_wait`` applies."""
+
     task: TaskId
     target_vm: int
     parked_at: float
+    wait_bound: Optional[float] = None
 
 
 @dataclass
@@ -60,6 +94,7 @@ class Reconfigurator:
     def __init__(self, spec: ClusterSpec, max_wait: float = 15.0):
         self.spec = spec
         self.max_wait = max_wait
+        self.adaptive = spec.adaptive
         self.vcpus: List[int] = [spec.base_map_slots] * spec.num_nodes
         self.aq: List[Deque[ParkedTask]] = [deque() for _ in range(spec.num_machines)]
         self.rq: List[Deque[int]] = [deque() for _ in range(spec.num_machines)]  # vm ids
@@ -69,15 +104,39 @@ class Reconfigurator:
         # match).  Set by the simulator / fleet runtime.
         self.validator: Optional[Callable[[int], bool]] = None
         self.stats = {"reconfigurations": 0, "parked": 0, "expired": 0,
-                      "total_wait": 0.0}
+                      "total_wait": 0.0, "park_declined": 0,
+                      "park_wins": 0, "park_losses": 0}
         # machines with a non-empty AQ / RQ, so match() touches only
         # machines that can possibly pair instead of sweeping all of them
         self._aq_nonempty: Set[int] = set()
         self._rq_nonempty: Set[int] = set()
-        # (parked_at, seq, machine, entry) min-heap; entries are lazy — a
-        # task already matched/cancelled fails the identity check on pop
+        # (key, seq, machine, entry) min-heap; key is the park time (legacy
+        # fixed max_wait) or the absolute expiry time (adaptive per-park
+        # bounds).  Entries are lazy — a task already matched/cancelled
+        # fails the identity check on pop.
         self._park_heap: List[Tuple[float, int, int, ParkedTask]] = []
         self._park_seq = 0
+        # task-id -> (machine, entry): O(1) cancel_parked / membership
+        self._parked_entry: Dict[TaskId, Tuple[int, ParkedTask]] = {}
+        # -- per-machine pressure signals (see AdaptiveConfig) --------------
+        m = spec.num_machines
+        # incremental mirror of len(self.rq[machine]) — updated at every
+        # offer/consume site, recounted by the invariant suite
+        self.rq_depth: List[int] = [0] * m
+        self.offer_ewma: List[Optional[float]] = [None] * m
+        self.last_offer: List[Optional[float]] = [None] * m
+        self.free_ewma: List[Optional[float]] = [None] * m
+        self.last_free: List[Optional[float]] = [None] * m
+        self.fail_streak: List[int] = [0] * m
+        self.last_fail: List[Optional[float]] = [None] * m
+        # cluster-level park win-rate EWMA (1 = every park ends local,
+        # 0 = every park ends remote); starts optimistic so the paper's
+        # closed-mix regime parks from the first heartbeat
+        self.park_outcome_ewma: float = 1.0
+        self._last_park: Optional[float] = None
+        # expired parks whose outcome (local vs remote launch) is still
+        # unknown: task -> target machine, resolved by note_park_outcome
+        self._expired_machine: Dict[TaskId, int] = {}
 
     def _valid_donor(self, vm: int) -> bool:
         if self.vcpus[vm] <= self.spec.min_vcpus_per_vm:
@@ -94,14 +153,29 @@ class Reconfigurator:
         return sum(1 for cand in self.rq[self.spec.machine_of(vm)]
                    if cand != vm and self._valid_donor(cand))
 
-    def park_task(self, task: TaskId, target_vm: int, now: float) -> None:
-        """AQ entry: task waits for a core on target_vm's machine."""
+    def park_task(self, task: TaskId, target_vm: int, now: float,
+                  wait_bound: Optional[float] = None) -> None:
+        """AQ entry: task waits for a core on target_vm's machine.
+
+        ``wait_bound`` is the adaptive per-park patience; in adaptive mode a
+        missing bound defaults to the clamped ``max_wait`` so direct callers
+        (tests, fleet runtime) stay within [floor, ceiling] too."""
         m = self.spec.machine_of(target_vm)
-        entry = ParkedTask(task, target_vm, now)
+        if self.adaptive.enabled:
+            if wait_bound is None:
+                wait_bound = min(self.adaptive.max_wait_ceiling,
+                                 max(self.adaptive.max_wait_floor,
+                                     self.max_wait))
+            key = now + wait_bound          # heap orders by expiry time
+        else:
+            wait_bound = None               # legacy: fixed max_wait applies
+            key = now                       # heap orders by park time
+        entry = ParkedTask(task, target_vm, now, wait_bound)
         self.aq[m].append(entry)
         self._aq_nonempty.add(m)
         self._park_seq += 1
-        heapq.heappush(self._park_heap, (now, self._park_seq, m, entry))
+        heapq.heappush(self._park_heap, (key, self._park_seq, m, entry))
+        self._parked_entry[task] = (m, entry)
         self.stats["parked"] += 1
 
     def release_core(self, vm: int, now: float) -> None:
@@ -110,20 +184,54 @@ class Reconfigurator:
             return
         m = self.spec.machine_of(vm)
         self.rq[m].append(vm)
+        self.rq_depth[m] += 1
         self._rq_nonempty.add(m)
+        if self.adaptive.enabled:
+            # a donor offer is the machine's "core freed for neighbours"
+            # event: update the offer-interval EWMA and re-open parking
+            last = self.last_offer[m]
+            if last is not None:
+                self.offer_ewma[m] = self._ewma(self.offer_ewma[m], now - last)
+            self.last_offer[m] = now
+            self.fail_streak[m] = 0
+
+    def _ewma(self, prev: Optional[float], sample: float) -> float:
+        if prev is None:
+            return sample
+        a = self.adaptive.ewma_alpha
+        return a * sample + (1.0 - a) * prev
+
+    def observe_core_free(self, vm: int, now: float) -> None:
+        """Simulator hook: a core on ``vm`` just freed (map finish), whether
+        or not it was offered.  Feeds the raw core-free-interval EWMA."""
+        m = self.spec.machine_of(vm)
+        last = self.last_free[m]
+        if last is not None:
+            self.free_ewma[m] = self._ewma(self.free_ewma[m], now - last)
+        self.last_free[m] = now
 
     def _aq_sync(self, m: int) -> None:
         if not self.aq[m]:
             self._aq_nonempty.discard(m)
 
+    def _drop_parked_entry(self, task: TaskId, entry: ParkedTask) -> None:
+        """Clear the cancel index when ``entry`` leaves its AQ (but never a
+        newer park of the same task id)."""
+        cur = self._parked_entry.get(task)
+        if cur is not None and cur[1] is entry:
+            del self._parked_entry[task]
+
     def cancel_parked(self, task: TaskId) -> bool:
-        for m, q in enumerate(self.aq):
-            for item in list(q):
-                if item.task == task:
-                    q.remove(item)
-                    self._aq_sync(m)
-                    return True
-        return False
+        """Remove ``task``'s AQ entry, O(1) lookup via the park index (the
+        deque removal only walks that one machine's queue, bounded by the
+        scheduler's park depth — not every AQ in the cluster)."""
+        hit = self._parked_entry.pop(task, None)
+        if hit is None:
+            return False
+        m, entry = hit
+        self.aq[m].remove(entry)            # identity: ParkedTask has eq=False
+        self._aq_sync(m)
+        return True
 
     # -- matching ------------------------------------------------------------
     def match(self, now: float, donor_ok=None) -> List[PendingPlug]:
@@ -138,6 +246,7 @@ class Reconfigurator:
                 donor = None
                 while self.rq[m]:
                     cand = self.rq[m].popleft()
+                    self.rq_depth[m] -= 1
                     if (cand != parked.target_vm and self._valid_donor(cand)
                             and (donor_ok is None or donor_ok(cand))):
                         donor = cand
@@ -149,6 +258,7 @@ class Reconfigurator:
                 if self.vcpus[parked.target_vm] >= self.spec.max_vcpus_per_vm:
                     # target saturated: requeue task, put donor back
                     self.rq[m].append(donor)
+                    self.rq_depth[m] += 1
                     self.aq[m].append(parked)
                     break
                 self.vcpus[donor] -= 1
@@ -156,6 +266,23 @@ class Reconfigurator:
                                    now + self.spec.hotplug_latency)
                 self.in_flight.append(plug)
                 started.append(plug)
+                cur = self._parked_entry.get(parked.task)
+                live = cur is not None and cur[1] is parked
+                self._drop_parked_entry(parked.task, parked)
+                if self.adaptive.enabled and live:
+                    # a donor match of a *live* park is a win — record it
+                    # here: the matched task launches through the plug path,
+                    # which never reaches the scheduler's _launch_map
+                    # feedback.  A stale entry (its task already resolved
+                    # and reported) still gets the donated core, but must
+                    # not count a second win for the same park.
+                    self.fail_streak[m] = 0
+                    self.last_fail[m] = None
+                    a = self.adaptive
+                    self.park_outcome_ewma = (
+                        a.outcome_alpha
+                        + (1.0 - a.outcome_alpha) * self.park_outcome_ewma)
+                    self.stats["park_wins"] += 1
                 self.stats["reconfigurations"] += 1
                 self.stats["total_wait"] += now - parked.parked_at
             self._aq_sync(m)
@@ -172,26 +299,139 @@ class Reconfigurator:
         return done
 
     def expire_stale(self, now: float) -> List[ParkedTask]:
-        """Parked tasks past max_wait -> hand back for remote launch.
+        """Parked tasks past their wait bound -> hand back for remote launch.
 
-        The park-time heap makes the common "nothing expired" case O(1);
-        popped entries whose task already left its AQ (matched / cancelled)
-        are discarded."""
+        The park heap makes the common "nothing expired" case O(1); popped
+        entries whose task already left its AQ (matched / cancelled) are
+        discarded.  Legacy mode keys the heap by park time against the fixed
+        ``max_wait``; adaptive mode keys it by each entry's absolute expiry
+        time (per-park bounds vary, so park order is not expiry order)."""
         out = []
         heap = self._park_heap
+        adaptive = self.adaptive.enabled
         # NB: `now - parked_at > max_wait` is the seed's exact expression;
         # rewriting it as `parked_at < now - max_wait` is NOT float-identical
         # at the boundary and breaks decision parity.
-        while heap and now - heap[0][0] > self.max_wait:
-            parked_at, _, m, item = heapq.heappop(heap)
+        while heap and (now - heap[0][0] > 0.0 if adaptive
+                        else now - heap[0][0] > self.max_wait):
+            _, _, m, item = heapq.heappop(heap)
             q = self.aq[m]
             if not any(it is item for it in q):
                 continue            # already matched or cancelled
             q.remove(item)
             self._aq_sync(m)
+            cur = self._parked_entry.get(item.task)
+            live = cur is not None and cur[1] is item
+            self._drop_parked_entry(item.task, item)
+            if adaptive and live:
+                # outcome unknown yet: the task may still launch locally on
+                # its data node (the reservation paid) or remotely (it
+                # didn't) — the scheduler reports which via
+                # note_park_outcome.  A stale entry's task already resolved
+                # and reported, so recording it here would leak the dict
+                # entry forever (the task never launches again).
+                self._expired_machine[item.task] = m
             out.append(item)
             self.stats["expired"] += 1
         return out
+
+    def note_park_outcome(self, task: TaskId, now: float, won: bool) -> None:
+        """Scheduler feedback closing the park-admission loop: ``task`` —
+        parked (possibly expired) earlier — just launched.  ``won`` means it
+        ran data-locally (reservation or match paid); a remote launch after
+        a full-patience wait is the genuine starvation signal that feeds the
+        machine's fail streak.
+
+        The park index entry is dropped here: the park is *resolved*, and a
+        leftover AQ entry is from now on pure-stale — a later donor match
+        of it must not count a second win for the same park."""
+        hit = self._parked_entry.get(task)
+        if hit is not None:
+            self._drop_parked_entry(task, hit[1])
+            m = hit[0]
+        else:
+            m = self._expired_machine.pop(task, None)
+        if m is None:
+            return
+        a = self.adaptive
+        self.park_outcome_ewma = (a.outcome_alpha * (1.0 if won else 0.0)
+                                  + (1.0 - a.outcome_alpha)
+                                  * self.park_outcome_ewma)
+        if won:
+            self.fail_streak[m] = 0
+            self.last_fail[m] = None    # full park patience restored
+            self.stats["park_wins"] += 1
+        else:
+            self.fail_streak[m] += 1
+            self.last_fail[m] = now
+            self.stats["park_losses"] += 1
+
+    # -- adaptive pressure queries (see AdaptiveConfig) ---------------------
+    def predicted_core_wait(self, machine: int, now: float) -> Optional[float]:
+        """Best-effort seconds until ``machine`` can serve a parked task a
+        core (donor match or its own freed slot), from the incremental
+        pressure signals.  ``None`` = no signal yet (optimistic: the caller
+        parks as a probe)."""
+        if self.rq_depth[machine] > 0 and any(
+                self._valid_donor(c) for c in self.rq[machine]):
+            return self.spec.hotplug_latency    # a live offer is queued
+        free = self.free_ewma[machine]
+        if free is None:
+            return None
+        # cores recycle every ~free seconds; each AQ entry ahead plus the
+        # machine's own local backlog stretches the wait, so the queue depth
+        # scales the estimate (the "AQ wait distribution" signal)
+        return free * (1 + len(self.aq[machine]))
+
+    def _effective_streak(self, machine: int, now: float) -> int:
+        """Fail streak with cool-down: after ``fail_cooldown`` quiet seconds
+        the machine earns a fresh probe (otherwise a suspended machine could
+        never re-qualify — no parks, no outcomes, no signal).  ``last_fail``
+        is kept, so post-cooldown probes still run at floor patience until
+        one actually pays off."""
+        streak = self.fail_streak[machine]
+        if streak and self.last_fail[machine] is not None \
+                and now - self.last_fail[machine] > self.adaptive.fail_cooldown:
+            streak = self.fail_streak[machine] = 0
+        return streak
+
+    def park_decision(self, machine: int, now: float,
+                      breakeven: float) -> Tuple[bool, float]:
+        """Adaptive park admission for a task whose remote launch would cost
+        ``breakeven`` extra seconds: returns ``(should_park, wait_bound)``.
+
+        Declines when the machine's recent parks keep ending in remote
+        launches (fail streak at the limit) or the predicted core wait
+        exceeds the (margin-scaled) break-even — the caller then launches
+        remotely immediately.  A machine that has lost a park since its last
+        win only earns short floor-patience probes; full patience returns
+        once a probe pays off."""
+        a = self.adaptive
+        streak = self._effective_streak(machine, now)
+        if streak >= a.fail_streak_limit:
+            self.stats["park_declined"] += 1
+            return False, 0.0
+        allowance = a.breakeven_margin * breakeven
+        pred = self.predicted_core_wait(machine, now)
+        if pred is not None and pred + self.spec.hotplug_latency > allowance:
+            self.stats["park_declined"] += 1
+            return False, 0.0
+        probing = False
+        if self.park_outcome_ewma < a.park_win_floor:
+            # cluster-wide, parks have been ending remote: suspend parking,
+            # letting one cheap probe through per cooldown so recovery
+            # (wins push the EWMA back up) is still detectable
+            if self._last_park is not None \
+                    and now - self._last_park < a.fail_cooldown:
+                self.stats["park_declined"] += 1
+                return False, 0.0
+            probing = True
+        base = (a.max_wait_floor
+                if probing or self.last_fail[machine] is not None
+                else self.max_wait)
+        bound = min(a.max_wait_ceiling, max(a.max_wait_floor, base))
+        self._last_park = now
+        return True, bound
 
     def next_event_time(self) -> Optional[float]:
         if not self.in_flight:

@@ -74,6 +74,11 @@ class SchedulerBase:
         self.local_pending_count: List[int] = [0] * spec.num_nodes
         self.total_pending_maps = 0
         self.ready_pending_reduces = 0
+        # active jobs whose map phase is still open — with
+        # total_pending_maps this gives the backlog's mean job width
+        # (the adaptive park-admission signal), maintained at the same
+        # transitions as the map_done flag
+        self.map_open_jobs = 0
 
     # -- lifecycle ----------------------------------------------------------
     def job_added(self, job: JobSpec, now: float) -> None:
@@ -83,6 +88,7 @@ class SchedulerBase:
         self.active[job.job_id] = rt
         self.bootstrap[job.job_id] = rt
         self.total_pending_maps += job.u_m
+        self.map_open_jobs += 1
         counts = self.local_pending_count
         for placement in job.block_placement[:job.u_m]:
             for node in set(placement):
@@ -110,6 +116,7 @@ class SchedulerBase:
             job.map_duration_sum += duration
             if not job.map_done and job.map_finished:
                 job.map_done = True
+                self.map_open_jobs -= 1
                 # reduces become schedulable the moment the map phase ends
                 self.ready_pending_reduces += len(job.pending_reduce)
         else:
@@ -207,6 +214,7 @@ class CompletionTimeScheduler(SchedulerBase):
         super().__init__(spec)
         self.reconfig = reconfig or Reconfigurator(spec)
         self.estimator = estimator or OnlineEstimator()
+        self.adaptive = self.reconfig.adaptive
         self.parked: Set[TaskId] = set()
         self._parked_maps_per_job: Dict[str, int] = {}
         # tasks whose reconfiguration wait expired once run remotely instead
@@ -215,6 +223,15 @@ class CompletionTimeScheduler(SchedulerBase):
         # max parked tasks per target machine's AQ
         self.park_depth = 2
         self.max_slots = spec.num_nodes * spec.base_map_slots
+        # adaptive overload detection: active jobs whose absolute deadline
+        # has passed (completion-time goal lost), materialized lazily from a
+        # deadline min-heap as the clock advances — O(1) amortized per job
+        self.overdue: Set[str] = set()
+        self._overdue_heap: List[Tuple[float, int, str]] = []
+        # hysteresis latch: overload mode persists through the drain until
+        # the map backlog genuinely clears (a surge's damage is done in its
+        # tail, which sits below any instantaneous entry threshold)
+        self.overload_mode = False
         # active jobs ordered by (absolute deadline, admission seq): the
         # admission tiebreak reproduces the seed's stable sort exactly;
         # _edf_jobs mirrors _edf with the JobRuntime objects so select
@@ -228,6 +245,13 @@ class CompletionTimeScheduler(SchedulerBase):
         i = bisect.bisect_left(self._edf, entry)
         self._edf.insert(i, entry)
         self._edf_jobs.insert(i, job)
+        if self.adaptive.enabled:
+            heapq.heappush(self._overdue_heap, entry)
+            if self.overload_mode and len(self.active) == 1:
+                # this job found a fully-drained cluster (select never runs
+                # while idle, so the latch cannot observe the drain itself):
+                # the pressured epoch ended — release the overload latch
+                self.overload_mode = False
         self._recompute_demand(job, now)
 
     def _job_deactivated(self, job: JobRuntime) -> None:
@@ -236,6 +260,47 @@ class CompletionTimeScheduler(SchedulerBase):
         if i < len(self._edf) and self._edf[i] == entry:
             del self._edf[i]
             del self._edf_jobs[i]
+        self.overdue.discard(job.spec.job_id)
+
+    def _sync_overdue(self, now: float) -> None:
+        """Move newly-overdue jobs off the deadline heap into ``overdue``
+        (jobs that already finished are skipped — deactivation removed them
+        from ``active`` and keeps them out of ``overdue``)."""
+        heap = self._overdue_heap
+        while heap and heap[0][0] < now:
+            _, _, jid = heapq.heappop(heap)
+            if jid in self.active:
+                self.overdue.add(jid)
+
+    def _overload_check(self, now: float) -> bool:
+        """Latching overload detector over the incremental pressure state.
+
+        Enter when the queued map backlog exceeds the entry fraction of
+        cluster slots *and* active jobs outnumber the entry fraction of
+        machines (many small jobs squeezed through shares far below their
+        width — the Fair regime); leave only once the cluster has fully
+        drained (hysteresis: the makespan damage of a surge happens in its
+        drain tail, which sits below any instantaneous entry threshold).
+        The ``overdue`` set (active jobs past their deadline) is kept in
+        sync here as an observable signal."""
+        self._sync_overdue(now)
+        a = self.adaptive
+        pending = self.total_pending_maps
+        if self.overload_mode:
+            # the latch stays until the cluster fully drains; select never
+            # runs while idle, so the actual release happens when the next
+            # job finds an empty cluster (see on_job_added)
+            if not self.active:
+                self.overload_mode = False    # defensive: same condition
+        elif self.active:
+            # both conditions strictly: a backlogged cluster with few wide
+            # jobs (the paper's closed mix) is EDF's home regime — only the
+            # many-small-jobs crowd flips the economics
+            if (pending >= a.overload_pending_factor * self.max_slots
+                    and len(self.active)
+                    >= a.overload_active_factor * self.spec.num_machines):
+                self.overload_mode = True
+        return self.overload_mode
 
     def on_task_finished(self, job: JobRuntime, task: TaskId, now: float) -> None:
         self._recompute_demand(job, now)
@@ -262,6 +327,11 @@ class CompletionTimeScheduler(SchedulerBase):
                                and not self.parked))
                 and (free_reduce <= 0 or self.ready_pending_reduces == 0)):
             return []
+        if self.adaptive.enabled and self._overload_check(now):
+            # pressured epoch: EDF-ordered allocation starves late-deadline
+            # jobs and serializes the drain — degenerate to the exact Fair
+            # assignment (parking suspended) until the cluster fully drains
+            return self._select_overloaded(node, free_map, free_reduce, now)
         out: List[Launch] = []
         # bootstrap jobs first (no completed or running tasks), oldest first;
         # then EDF ascending absolute deadline — both maintained
@@ -295,14 +365,7 @@ class CompletionTimeScheduler(SchedulerBase):
                 # task on the sibling VM is strictly faster than a remote one
                 # here (this is what makes Algorithm 1 pay off: the donor
                 # core must not be re-occupied by remote work).
-                m = self.spec.machine_of(node)
-                pending = sum(1 for p in self.reconfig.aq[m]
-                              if p.target_vm != node)
-                while (free_map > 0 and pending > 0
-                       and self.reconfig.vcpus[node] > self.spec.min_vcpus_per_vm):
-                    self.reconfig.release_core(node, now)
-                    free_map -= 1
-                    pending -= 1
+                free_map = self._donate_idle_cores(node, free_map, now)
             for job in ordered:
                 if free_map <= 0 and free_reduce <= 0:
                     break
@@ -326,13 +389,8 @@ class CompletionTimeScheduler(SchedulerBase):
                             # unplugs it, so the slot stays schedulable now
                             pass
                         else:
-                            out.append(launch)
+                            self._launch_map(job, launch, out, now)
                             free_map -= 1
-                            self._start_map(job, launch.task.index, launch.node)
-                            if launch.local:
-                                job.local_map_launches += 1
-                            else:
-                                job.remote_map_launches += 1
                 elif not job.all_done:
                     while (free_reduce > 0 and job.pending_reduce
                            and len(job.running_reduce) < n_r):
@@ -342,6 +400,107 @@ class CompletionTimeScheduler(SchedulerBase):
                         self._start_reduce(job, idx, node)
                         free_reduce -= 1
         return out
+
+    def _launch_map(self, job: JobRuntime, launch: Launch,
+                    out: List[Launch], now: float) -> None:
+        """Commit a (non-parked) map launch + adaptive outcome feedback: a
+        task that parked earlier (still-queued reservation or expired) just
+        resolved — data-locally (the park paid) or remotely (it didn't)."""
+        out.append(launch)
+        self._start_map(job, launch.task.index, launch.node)
+        if launch.local:
+            job.local_map_launches += 1
+        else:
+            job.remote_map_launches += 1
+        if self.adaptive.enabled:
+            task = launch.task
+            if task in self.parked or task in self.no_park:
+                self.reconfig.note_park_outcome(task, now, won=launch.local)
+
+    # -- adaptive overload mode (AdaptiveConfig, off by default) --------------
+
+    def _select_overloaded(self, node: int, free_map: int, free_reduce: int,
+                           now: float) -> List[Launch]:
+        """Latched-overload variant of ``select``: pure deficit round-robin
+        (the Fair regime).  Many small jobs squeezed through shares far
+        below their width is exactly where EDF-ordered allocation only
+        picks arbitrary winners, starves late-deadline jobs and serializes
+        the drain; new jobs have zero deficit, so the bootstrap-probe
+        precedence emerges on its own.  Parking is suspended here
+        (``_assign_map`` checks ``overload_mode``) — measured, even
+        live-offer parks queue behind stale offers under saturation."""
+        out: List[Launch] = []
+        free_map, free_reduce = self._fair_backfill(node, free_map,
+                                                    free_reduce, now, out)
+        # donate still-idle cores to parked tasks waiting on this machine
+        # (same donation rule as the legacy remote_fill pass)
+        self._donate_idle_cores(node, free_map, now)
+        return out
+
+    def _donate_idle_cores(self, node: int, free_map: int,
+                           now: float) -> int:
+        """Offer idle cores on ``node`` toward parked tasks waiting on its
+        machine's AQ (one offer per sibling-targeted entry, never below the
+        vCPU minimum); returns the remaining free slots."""
+        m = self.spec.machine_of(node)
+        pending = sum(1 for p in self.reconfig.aq[m] if p.target_vm != node)
+        while (free_map > 0 and pending > 0
+               and self.reconfig.vcpus[node] > self.spec.min_vcpus_per_vm):
+            self.reconfig.release_core(node, now)
+            free_map -= 1
+            pending -= 1
+        return free_map
+
+    def _fair_backfill(self, node: int, free_map: int, free_reduce: int,
+                       now: float, out: List[Launch]) -> Tuple[int, int]:
+        """Deficit round-robin over active jobs (the Fair baseline's loop),
+        with map candidates resolved through ``_assign_map`` — under the
+        overload latch (the only current caller) that means local-first
+        then immediate remote, parking bypassed.  The ``via_reconfig``
+        rotation below is defensive: if a future caller runs this loop
+        with parking admitted, a job that just parked rotates to the back
+        (commitment counts include parked maps) instead of re-parking."""
+        jobs = list(self.active.values())
+        if not jobs:
+            return free_map, free_reduce
+        by_seq = {j.seq: j for j in jobs}
+        parked_count = self._parked_maps_per_job
+
+        def commit(job: JobRuntime) -> int:
+            return (len(job.running_map) + len(job.running_reduce)
+                    + parked_count.get(job.spec.job_id, 0))
+
+        entries = sorted((commit(j), j.spec.submit_time, j.seq) for j in jobs)
+        while free_map > 0 or free_reduce > 0:
+            served: Optional[int] = None
+            for pos, (_, _, seq) in enumerate(entries):
+                job = by_seq[seq]
+                if free_map > 0 and not job.map_done:
+                    launch = self._assign_map(job, node, now)
+                    if launch is None:
+                        continue        # nothing launchable for this job now
+                    if launch.via_reconfig:
+                        served = pos    # parked: slot stays offered, rotate
+                        break
+                    self._launch_map(job, launch, out, now)
+                    free_map -= 1
+                    served = pos
+                    break
+                if (free_reduce > 0 and job.map_done and not job.all_done
+                        and job.pending_reduce):
+                    idx = job.first_pending_reduce()
+                    t = TaskId(job.spec.job_id, TaskKind.REDUCE, idx)
+                    out.append(Launch(t, node, local=True))
+                    self._start_reduce(job, idx, node)
+                    free_reduce -= 1
+                    served = pos
+                    break
+            if served is None:
+                break
+            _, _, seq = entries.pop(served)
+            job = by_seq[seq]
+            bisect.insort(entries, (commit(job), job.spec.submit_time, seq))
+        return free_map, free_reduce
 
     # -- Algorithm 1 -----------------------------------------------------------
     def _first_pending_not_parked(self, job: JobRuntime) -> Optional[int]:
@@ -386,16 +545,53 @@ class CompletionTimeScheduler(SchedulerBase):
         deadline_critical = slack <= 3.0 * self.reconfig.max_wait
         if task in self.no_park or deadline_critical or not allow_park:
             return Launch(task, node, local=False)
+        adaptive = self.reconfig.adaptive
+        if adaptive.enabled and (
+                self.overload_mode
+                or len(self.active) >= adaptive.park_active_factor
+                * self.spec.num_machines):
+            # Overload latch or a crowd of active jobs: per-job shares sit
+            # far below job widths, every parked map lands on its job's
+            # phase-critical path, and even live-offer parks queue behind
+            # stale offers under pressure (measured) — no park beats
+            # starting remotely right now, so both parking paths (S_rq and
+            # S_aq) are bypassed.
+            return Launch(task, node, local=False)
         # S_rq: data nodes by RQ entries desc (a pre-offered donor core means
         # wait ≈ hot-plug latency); else S_aq: data nodes by AQ entries asc.
         s_rq = sorted(placement, key=lambda v: -self.reconfig.rq_len(v))
+        wait_bound = None
         if self.reconfig.rq_len(s_rq[0]) > 0:
             p = s_rq[0]
+            if adaptive.enabled:
+                # a live donor offer: the match is imminent, so the park
+                # only needs the shortest patience in case it goes stale
+                wait_bound = adaptive.max_wait_floor
         else:
             p = min(placement, key=lambda v: self.reconfig.aq_len(v))
             if len(self.reconfig.aq[self.spec.machine_of(p)]) >= self.park_depth:
                 return None      # AQ saturated: leave for remote-fill / later
-        self.reconfig.park_task(task, p, now)   # AQ of machine(p)
+            if adaptive.enabled:
+                # width gate: a narrow backlog (few pending maps per
+                # map-open job) puts every parked map on its job's
+                # phase-critical path — launch remotely instead.  Wide
+                # jobs (the paper's closed mix) park for free: a parked
+                # map has plenty of siblings to keep its phase busy.
+                if (self.total_pending_maps
+                        < adaptive.park_min_width * self.map_open_jobs):
+                    self.reconfig.stats["park_declined"] += 1
+                    return Launch(task, node, local=False)
+                # pressure gate: park only when a donor core is predicted
+                # within the task's remote-launch break-even (the extra
+                # time a remote read would cost on this fabric)
+                prof = job.spec.profile
+                breakeven = (prof.map_time * prof.remote_penalty
+                             * self.spec.remote_penalty_scale)
+                ok, wait_bound = self.reconfig.park_decision(
+                    self.spec.machine_of(p), now, breakeven)
+                if not ok:
+                    return Launch(task, node, local=False)
+        self.reconfig.park_task(task, p, now, wait_bound=wait_bound)
         self.reconfig.release_core(node, now)   # RQ of machine(node)
         self.parked.add(task)
         self._parked_maps_per_job[job.spec.job_id] = (

@@ -252,6 +252,104 @@ class JobRuntime:
 
 
 @dataclass(frozen=True)
+class AdaptiveConfig:
+    """Pressure-adaptive reconfiguration policy (paper §4.1 extension).
+
+    The paper's Algorithm 1 parks a non-local map task on the data node's
+    machine with a *fixed* patience (``Reconfigurator.max_wait``) — a bet
+    that "the target system will soon have a free core".  Under sustained
+    saturation every VM keeps its freed cores for its own local work, the
+    bet loses, and parked tasks starve (the regime atlas' diurnal/20x2
+    loss cell).  When ``enabled``, the reconfigurator tracks per-machine
+    core-pressure signals — queued donor-offer depth (valid RQ entries),
+    the oldest AQ wait, and an EWMA of donor-offer intervals fed by the
+    simulator's release events — and uses them to
+
+    * **gate park admission**: when the predicted core wait exceeds the
+      task's remote-launch break-even (``map_time x remote_penalty``,
+      fabric-scaled), or the machine's recent parks keep ending in remote
+      launches (fail streak), the task launches remotely immediately
+      instead of parking;
+    * **scale each park's patience**: a machine with no recent failure
+      parks at the fixed ``max_wait``; one that lost a park since its last
+      win (or a probe under the suspended win-rate floor) only earns
+      ``max_wait_floor`` — every bound clamped to
+      ``[max_wait_floor, max_wait_ceiling]``;
+    * **suspend parking on starved machines**: ``fail_streak_limit``
+      remote-ending park outcomes in a row suspend parking there until an
+      offer arrives, a park pays off, or ``fail_cooldown`` quiet seconds
+      earn a fresh probe;
+    * **spread capacity under sustained overload**: when the queued map
+      backlog exceeds ``overload_pending_factor x`` cluster map slots and
+      active jobs outnumber ``overload_active_factor x`` machines (EDF
+      priority then only serializes the drain tail), scheduling
+      degenerates to the exact Fair assignment (deficit round-robin at
+      task granularity, parking suspended), latched until the cluster
+      fully drains.  The scheduler also tracks the set of active jobs
+      already past their deadline (``overdue``) as an observable pressure
+      signal.
+
+    Defaults to **off** — with ``enabled=False`` the engine is bit-exact
+    against the frozen legacy engine (pinned by the parity fuzz suite).
+    """
+
+    enabled: bool = False
+    max_wait_floor: float = 4.0       # seconds; shortest per-park patience
+    max_wait_ceiling: float = 45.0    # seconds; longest per-park patience
+    ewma_alpha: float = 0.25          # weight of the newest observed interval
+    breakeven_margin: float = 1.0     # park only if predicted <= margin x remote cost
+    fail_streak_limit: int = 2        # remote-ending parks that suspend a machine
+    fail_cooldown: float = 30.0       # quiet seconds before a suspended machine re-probes
+    outcome_alpha: float = 0.12       # weight of the newest park outcome (cluster-wide)
+    park_win_floor: float = 0.35      # suspend all parking when win-rate EWMA dips below
+    # parking is only admitted while active jobs stay under
+    # park_active_factor x machines AND the queued backlog averages at
+    # least park_min_width pending maps per active job: narrow jobs (or a
+    # crowd) put every parked map on its job's phase-critical path, while
+    # wide jobs (the paper's closed mix) park for free — a parked map has
+    # plenty of siblings to keep its job's map phase busy
+    park_active_factor: float = 0.3
+    park_min_width: float = 12.0
+    # overload (fair-spread) mode enters when the map backlog reaches
+    # pending_factor x cluster map slots AND active jobs reach
+    # active_factor x machines, then latches until the cluster fully
+    # drains (idle epoch reset)
+    overload_pending_factor: float = 0.25
+    overload_active_factor: float = 0.5
+
+    def __post_init__(self) -> None:
+        if self.max_wait_floor < 0:
+            raise ValueError("max_wait_floor must be non-negative")
+        if self.max_wait_ceiling < self.max_wait_floor:
+            raise ValueError("max_wait_ceiling must be >= max_wait_floor")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha must be in (0, 1]")
+        if self.breakeven_margin <= 0:
+            raise ValueError("breakeven_margin must be positive")
+        if self.fail_streak_limit < 1:
+            raise ValueError("fail_streak_limit must be >= 1")
+        if self.fail_cooldown < 0:
+            raise ValueError("fail_cooldown must be non-negative")
+        if not 0.0 < self.outcome_alpha <= 1.0:
+            raise ValueError("outcome_alpha must be in (0, 1]")
+        if not 0.0 <= self.park_win_floor <= 1.0:
+            raise ValueError("park_win_floor must be in [0, 1]")
+        if self.park_active_factor <= 0:
+            raise ValueError("park_active_factor must be positive")
+        if self.park_min_width < 0:
+            raise ValueError("park_min_width must be non-negative")
+        if self.overload_pending_factor <= 0 or self.overload_active_factor <= 0:
+            raise ValueError("overload entry factors must be positive")
+
+    def to_dict(self) -> Dict[str, object]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "AdaptiveConfig":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class ClusterSpec:
     """Static shape of the virtualized cluster (paper §5: 20 machines,
     2 map + 2 reduce slots per node)."""
@@ -265,6 +363,10 @@ class ClusterSpec:
     replication: int = 3           # HDFS default
     heartbeat_interval: float = 3.0   # paper: "Usually the heartbeat interval is 3s"
     hotplug_latency: float = 0.5      # seconds for a vCPU assign/release
+    # network-fabric calibration: scales every profile's remote-read penalty
+    # (1.0 = the paper's 2012 shared 1GbE; ~0.25 = 10GbE; ~0.0625 = 40GbE)
+    remote_penalty_scale: float = 1.0
+    adaptive: AdaptiveConfig = AdaptiveConfig()
 
     @property
     def num_nodes(self) -> int:
@@ -281,6 +383,9 @@ class ClusterSpec:
 
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "ClusterSpec":
+        d = dict(d)
+        if isinstance(d.get("adaptive"), dict):
+            d["adaptive"] = AdaptiveConfig.from_dict(d["adaptive"])
         return cls(**d)
 
 

@@ -61,7 +61,8 @@ def _parse_seeds(tokens: List[str]) -> Tuple[int, ...]:
 def _cluster_from_args(args) -> ClusterSpec:
     return ClusterSpec(num_machines=args.machines,
                        vms_per_machine=args.vms,
-                       replication=args.replication)
+                       replication=args.replication,
+                       remote_penalty_scale=args.remote_penalty_scale)
 
 
 def _trace_ref_from_args(args) -> TraceRef:
@@ -86,6 +87,9 @@ def _add_grid_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--machines", type=int, default=20)
     p.add_argument("--vms", type=int, default=2)
     p.add_argument("--replication", type=int, default=1)
+    p.add_argument("--remote-penalty-scale", type=float, default=1.0,
+                   help="network-fabric calibration of the remote-read "
+                        "penalty (1.0 = 1GbE, 0.25 ~ 10GbE, 0.0625 ~ 40GbE)")
     p.add_argument("--cache", type=Path, default=DEFAULT_CACHE,
                    help=f"result cache directory (default: {DEFAULT_CACHE})")
     p.add_argument("--workers", type=int, default=0,
@@ -152,8 +156,16 @@ def cmd_regimes(args) -> int:
     seeds = (_parse_seeds(args.seeds) if args.seeds is not None
              else (regimes_mod.QUICK_SEEDS if args.quick
                    else regimes_mod.FULL_SEEDS))
+    fabrics = tuple(args.fabrics) if args.fabrics is not None else (
+        regimes_mod.QUICK_FABRICS if args.quick
+        else regimes_mod.FULL_FABRICS)
+    for f in fabrics:
+        if f not in regimes_mod.FABRICS:
+            raise SystemExit(f"unknown fabric {f!r}; available: "
+                             f"{', '.join(regimes_mod.FABRICS)}")
     report = regimes_mod.run_regimes(
-        presets, shapes, seeds, args.cache, workers=args.workers,
+        presets, shapes, seeds, args.cache, fabrics=fabrics,
+        workers=args.workers,
         progress=print if args.verbose else None)
     out = report.save_json(args.out)
     print(report.format())
@@ -298,7 +310,8 @@ def main(argv=None) -> int:
 
     rg = sub.add_parser("regimes",
                         help="fleet-scale regime atlas: presets x cluster "
-                             "shapes x {proposed, fair, fifo}")
+                             "shapes (x fabrics) x {proposed, adaptive, "
+                             "fair, fifo}")
     rg.add_argument("--quick", action="store_true",
                     help=f"sub-grid: shapes {regimes_mod.QUICK_SHAPES}, "
                          f"seeds {regimes_mod.QUICK_SEEDS} (cache-compatible "
@@ -309,6 +322,10 @@ def main(argv=None) -> int:
                     help="cluster shapes: " + ", ".join(FLEET_SHAPES))
     rg.add_argument("--seeds", nargs="+", default=None,
                     help="paired seeds; accepts `a:b` ranges")
+    rg.add_argument("--fabrics", nargs="*", default=None,
+                    help="extra remote-penalty fabrics swept on the first "
+                         "shape: " + ", ".join(regimes_mod.FULL_FABRICS)
+                         + f" (full default: {regimes_mod.FULL_FABRICS})")
     rg.add_argument("--cache", type=Path, default=DEFAULT_CACHE)
     rg.add_argument("--workers", type=int, default=0)
     rg.add_argument("--out", type=Path, default=Path("regimes.json"),

@@ -12,7 +12,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.simcluster.sim import SimResult
-from repro.simcluster.traces import Trace
+from repro.simcluster.traces import Trace, _dumps
 
 RECORD_VERSION = 1
 
@@ -64,9 +64,11 @@ class RunRecord:
     # -- identity -----------------------------------------------------------
     def pair_key(self):
         """Records with equal pair keys differ only in scheduler — the unit
-        paired statistics match on."""
-        cluster = tuple(sorted(self.cluster.items()))
-        return (self.trace_name, self.trace_seed, cluster, self.seed)
+        paired statistics match on.  The cluster dict is canonical-JSON
+        encoded (the cache's ``_dumps``): it can hold nested config dicts
+        (``adaptive``), which a tuple-of-items would leave unhashable."""
+        return (self.trace_name, self.trace_seed, _dumps(self.cluster),
+                self.seed)
 
     # -- aggregation --------------------------------------------------------
     def mean_completion_by_workload(self) -> Dict[str, float]:

@@ -41,8 +41,16 @@ FULL_SHAPES: Tuple[str, ...] = ("20x2", "50x2", "100x2")
 QUICK_SHAPES: Tuple[str, ...] = ("20x2", "50x2")
 FULL_SEEDS: Tuple[int, ...] = tuple(range(8))
 QUICK_SEEDS: Tuple[int, ...] = (0, 1)
-SCHEDULERS: Tuple[str, ...] = ("proposed", "fair", "fifo")
-REPORT_VERSION = 1
+SCHEDULERS: Tuple[str, ...] = ("proposed", "adaptive", "fair", "fifo")
+# remote-penalty calibration of the network fabric: at 1.0 a non-local map
+# pays the full 2012-era shared-1GbE remote-read penalty; faster fabrics
+# scale it down (~linear in link speed) — the axis answers "at what fabric
+# speed does the reconfiguration mechanism stop paying?"
+FABRICS: Dict[str, float] = {"1GbE": 1.0, "10GbE": 0.25, "40GbE": 0.0625}
+BASE_FABRIC = "1GbE"
+FULL_FABRICS: Tuple[str, ...] = ("10GbE", "40GbE")   # extra cells, 20x2 only
+QUICK_FABRICS: Tuple[str, ...] = ()
+REPORT_VERSION = 2
 
 
 def scaled_jobs(preset: str, machines: int) -> int:
@@ -52,25 +60,42 @@ def scaled_jobs(preset: str, machines: int) -> int:
 
 
 def regime_spec(preset: str, shape: str,
-                seeds: Sequence[int] = FULL_SEEDS) -> ExperimentSpec:
+                seeds: Sequence[int] = FULL_SEEDS,
+                fabric: str = BASE_FABRIC) -> ExperimentSpec:
     """One atlas cell as a sweep spec: scaled preset trace x shape x all
-    three schedulers, trace seed coupled to the sim seed (every replication
-    re-rolls arrivals and placements for *all* schedulers alike)."""
+    four schedulers, trace seed coupled to the sim seed (every replication
+    re-rolls arrivals and placements for *all* schedulers alike).
+    ``fabric`` calibrates the remote-read penalty via
+    ``ClusterSpec.remote_penalty_scale``."""
     machines, _ = FLEET_SHAPES[shape]
     config = dataclasses.replace(PRESETS[preset],
                                  num_jobs=scaled_jobs(preset, machines))
+    cluster = fleet_shape(shape)
+    if fabric != BASE_FABRIC:
+        cluster = dataclasses.replace(cluster,
+                                      remote_penalty_scale=FABRICS[fabric])
     return ExperimentSpec(
-        name=f"regime-{preset}-{shape}",
+        name=f"regime-{preset}-{shape}-{fabric}",
         traces=(TraceRef(config=config),),
-        clusters=(fleet_shape(shape),),
+        clusters=(cluster,),
         schedulers=SCHEDULERS,
         seeds=tuple(seeds),
     )
 
 
+def _verdict_of(cmp: PairedComparison) -> str:
+    """'win' / 'loss' when the 95% CI excludes zero, else 'tie'."""
+    if cmp.ci_lo_pct > 0:
+        return "win"
+    if cmp.ci_hi_pct < 0:
+        return "loss"
+    return "tie"
+
+
 @dataclass
 class RegimeCell:
-    """Verdict for one (workload regime, cluster shape) point of the atlas."""
+    """Verdict for one (workload regime, cluster shape, fabric) point of
+    the atlas."""
 
     preset: str
     shape: str
@@ -80,43 +105,51 @@ class RegimeCell:
     seeds: Tuple[int, ...]
     vs_fair: PairedComparison            # proposed-vs-fair throughput
     vs_fifo: PairedComparison            # proposed-vs-fifo throughput
+    adaptive_vs_fair: PairedComparison   # adaptive-vs-fair throughput
+    adaptive_vs_proposed: PairedComparison
     locality: Dict[str, float]           # mean locality rate per scheduler
     deadline_frac: Dict[str, float]      # mean deadlines-met / jobs per run
     mean_makespan: Dict[str, float]
+    fabric: str = BASE_FABRIC
 
     def verdict(self) -> str:
-        """'win' / 'loss' when the proposed-vs-fair 95% CI excludes zero,
-        else 'tie'."""
-        if self.vs_fair.ci_lo_pct > 0:
-            return "win"
-        if self.vs_fair.ci_hi_pct < 0:
-            return "loss"
-        return "tie"
+        """Proposed-vs-fair verdict (the legacy fixed-policy column)."""
+        return _verdict_of(self.vs_fair)
 
-    def locality_delta_pp(self) -> float:
-        """Locality-rate gain of proposed over fair, percentage points."""
-        return (self.locality["proposed"] - self.locality["fair"]) * 100.0
+    def adaptive_verdict(self) -> str:
+        """Adaptive-vs-fair verdict (the pressure-adaptive column)."""
+        return _verdict_of(self.adaptive_vs_fair)
 
-    def deadline_delta_pp(self) -> float:
-        """Deadlines-met-fraction gain of proposed over fair, pp."""
-        return (self.deadline_frac["proposed"]
+    def locality_delta_pp(self, scheduler: str = "proposed") -> float:
+        """Locality-rate gain of ``scheduler`` over fair, percentage pts."""
+        return (self.locality[scheduler] - self.locality["fair"]) * 100.0
+
+    def deadline_delta_pp(self, scheduler: str = "proposed") -> float:
+        """Deadlines-met-fraction gain of ``scheduler`` over fair, pp."""
+        return (self.deadline_frac[scheduler]
                 - self.deadline_frac["fair"]) * 100.0
 
     def to_dict(self) -> Dict[str, object]:
         return {
             "preset": self.preset,
             "shape": self.shape,
+            "fabric": self.fabric,
             "machines": self.machines,
             "vms": self.vms,
             "num_jobs": self.num_jobs,
             "seeds": list(self.seeds),
             "verdict": self.verdict(),
+            "adaptive_verdict": self.adaptive_verdict(),
             "throughput_vs_fair": self.vs_fair.to_dict(),
             "throughput_vs_fifo": self.vs_fifo.to_dict(),
+            "adaptive_vs_fair": self.adaptive_vs_fair.to_dict(),
+            "adaptive_vs_proposed": self.adaptive_vs_proposed.to_dict(),
             "locality": self.locality,
             "locality_delta_pp": self.locality_delta_pp(),
+            "adaptive_locality_delta_pp": self.locality_delta_pp("adaptive"),
             "deadline_frac": self.deadline_frac,
             "deadline_delta_pp": self.deadline_delta_pp(),
+            "adaptive_deadline_delta_pp": self.deadline_delta_pp("adaptive"),
             "mean_makespan": self.mean_makespan,
         }
 
@@ -129,7 +162,15 @@ class RegimeReport:
     cells: List[RegimeCell]
     simulated: int
     cached: int
+    fabrics: Tuple[str, ...] = (BASE_FABRIC,)
     version: int = REPORT_VERSION
+
+    def cell(self, preset: str, shape: str,
+             fabric: str = BASE_FABRIC) -> RegimeCell:
+        for c in self.cells:
+            if (c.preset, c.shape, c.fabric) == (preset, shape, fabric):
+                return c
+        raise KeyError((preset, shape, fabric))
 
     def to_dict(self) -> Dict[str, object]:
         return {
@@ -137,6 +178,7 @@ class RegimeReport:
             "presets": list(self.presets),
             "shapes": list(self.shapes),
             "seeds": list(self.seeds),
+            "fabrics": list(self.fabrics),
             "schedulers": list(SCHEDULERS),
             "simulated": self.simulated,
             "cached": self.cached,
@@ -152,36 +194,46 @@ class RegimeReport:
 
     # -- human-readable views -----------------------------------------------
     def format(self) -> str:
-        lines = [f"== regime atlas: proposed vs fair/fifo "
+        lines = [f"== regime atlas: proposed/adaptive vs fair (+fifo) "
                  f"({len(self.seeds)} paired seeds/cell; "
                  f"{self.simulated} simulated, {self.cached} cached) =="]
         for c in self.cells:
-            g = c.vs_fair
+            g, a = c.vs_fair, c.adaptive_vs_fair
             lines.append(
-                f"  {c.preset:13s} {c.shape:6s} ({c.num_jobs:3d} jobs)  "
-                f"vs fair {g.mean_gain_pct:+6.1f}% "
+                f"  {c.preset:13s} {c.shape:6s} {c.fabric:5s} "
+                f"({c.num_jobs:3d} jobs)  "
+                f"prop {g.mean_gain_pct:+6.1f}% "
                 f"[{g.ci_lo_pct:+6.1f}%, {g.ci_hi_pct:+6.1f}%] "
-                f"win {g.win_rate:4.0%}  "
+                f"-> {c.verdict():4s}  "
+                f"adapt {a.mean_gain_pct:+6.1f}% "
+                f"[{a.ci_lo_pct:+6.1f}%, {a.ci_hi_pct:+6.1f}%] "
+                f"-> {c.adaptive_verdict():4s}  "
                 f"Δlocal {c.locality_delta_pp():+5.1f}pp  "
-                f"Δddl {c.deadline_delta_pp():+5.1f}pp  -> {c.verdict()}")
+                f"Δddl {c.deadline_delta_pp():+5.1f}pp")
         return "\n".join(lines)
 
     def to_markdown(self) -> str:
         head = [
-            "| regime | cluster | jobs | tput gain vs fair (95% CI) | win "
-            "rate | tput gain vs fifo | Δ locality | Δ deadlines | verdict |",
-            "| --- | --- | ---: | --- | ---: | --- | ---: | ---: | --- |",
+            "| regime | cluster | fabric | jobs | proposed vs fair (95% CI) "
+            "| verdict | adaptive vs fair (95% CI) | verdict | adaptive vs "
+            "proposed | Δ locality (prop/adapt) | Δ deadlines (prop/adapt) |",
+            "| --- | --- | --- | ---: | --- | --- | --- | --- | --- | --- "
+            "| --- |",
         ]
         rows = []
         for c in self.cells:
-            f, o = c.vs_fair, c.vs_fifo
+            f, a, ap = c.vs_fair, c.adaptive_vs_fair, c.adaptive_vs_proposed
             rows.append(
-                f"| {c.preset} | {c.shape} | {c.num_jobs} "
+                f"| {c.preset} | {c.shape} | {c.fabric} | {c.num_jobs} "
                 f"| {f.mean_gain_pct:+.1f}% [{f.ci_lo_pct:+.1f}%, "
-                f"{f.ci_hi_pct:+.1f}%] | {f.win_rate:.0%} "
-                f"| {o.mean_gain_pct:+.1f}% [{o.ci_lo_pct:+.1f}%, "
-                f"{o.ci_hi_pct:+.1f}%] | {c.locality_delta_pp():+.1f} pp "
-                f"| {c.deadline_delta_pp():+.1f} pp | {c.verdict()} |")
+                f"{f.ci_hi_pct:+.1f}%] | {c.verdict()} "
+                f"| {a.mean_gain_pct:+.1f}% [{a.ci_lo_pct:+.1f}%, "
+                f"{a.ci_hi_pct:+.1f}%] | {c.adaptive_verdict()} "
+                f"| {ap.mean_gain_pct:+.1f}% "
+                f"| {c.locality_delta_pp():+.1f} / "
+                f"{c.locality_delta_pp('adaptive'):+.1f} pp "
+                f"| {c.deadline_delta_pp():+.1f} / "
+                f"{c.deadline_delta_pp('adaptive'):+.1f} pp |")
         return "\n".join(head + rows)
 
 
@@ -193,45 +245,65 @@ def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
                 shapes: Sequence[str] = FULL_SHAPES,
                 seeds: Sequence[int] = FULL_SEEDS,
                 cache_dir: Union[str, Path] = ".exp-cache",
-                *, workers: int = 0, n_boot: int = 2000,
+                *, fabrics: Sequence[str] = (),
+                workers: int = 0, n_boot: int = 2000,
                 progress=None) -> RegimeReport:
     """Run (or re-serve from cache) the full atlas grid and distill the
-    per-regime verdicts."""
+    per-regime verdicts.  ``fabrics`` adds a remote-penalty sweep: each
+    extra fabric re-runs every preset on the *first* shape (the paper's
+    20x2 unless overridden) with the scaled remote-read penalty."""
+    for f in fabrics:
+        if f not in FABRICS:
+            raise ValueError(f"unknown fabric {f!r}; available: "
+                             f"{', '.join(FABRICS)}")
     cells: List[RegimeCell] = []
     simulated = cached = 0
-    for preset in presets:
-        for shape in shapes:
-            spec = regime_spec(preset, shape, seeds)
-            report = run_experiment(spec, cache_dir, workers=workers,
-                                    progress=progress)
-            simulated += report.simulated
-            cached += report.cached
-            by = report.by_scheduler()
-            machines, vms = FLEET_SHAPES[shape]
-            cells.append(RegimeCell(
-                preset=preset,
-                shape=shape,
-                machines=machines,
-                vms=vms,
-                num_jobs=scaled_jobs(preset, machines),
-                seeds=tuple(seeds),
-                vs_fair=compare_throughput(by["fair"], by["proposed"],
-                                           n_boot=n_boot),
-                vs_fifo=compare_throughput(by["fifo"], by["proposed"],
-                                           n_boot=n_boot),
-                locality={s: _mean([r.locality_rate for r in rs])
-                          for s, rs in by.items()},
-                deadline_frac={
-                    s: _mean([r.deadlines_met / r.jobs_total for r in rs
-                              if r.jobs_total])
-                    for s, rs in by.items()},
-                mean_makespan={s: _mean([r.makespan for r in rs])
-                               for s, rs in by.items()},
-            ))
-            if progress:
-                c = cells[-1]
-                progress(f"[{preset}/{shape}] vs fair "
-                         f"{c.vs_fair.mean_gain_pct:+.1f}% -> {c.verdict()}")
+    points = [(preset, shape, BASE_FABRIC)
+              for preset in presets for shape in shapes]
+    points += [(preset, shapes[0], fabric)
+               for fabric in fabrics for preset in presets
+               if fabric != BASE_FABRIC]
+    for preset, shape, fabric in points:
+        spec = regime_spec(preset, shape, seeds, fabric=fabric)
+        report = run_experiment(spec, cache_dir, workers=workers,
+                                progress=progress)
+        simulated += report.simulated
+        cached += report.cached
+        by = report.by_scheduler()
+        machines, vms = FLEET_SHAPES[shape]
+        cells.append(RegimeCell(
+            preset=preset,
+            shape=shape,
+            fabric=fabric,
+            machines=machines,
+            vms=vms,
+            num_jobs=scaled_jobs(preset, machines),
+            seeds=tuple(seeds),
+            vs_fair=compare_throughput(by["fair"], by["proposed"],
+                                       n_boot=n_boot),
+            vs_fifo=compare_throughput(by["fifo"], by["proposed"],
+                                       n_boot=n_boot),
+            adaptive_vs_fair=compare_throughput(by["fair"], by["adaptive"],
+                                                n_boot=n_boot),
+            adaptive_vs_proposed=compare_throughput(
+                by["proposed"], by["adaptive"], n_boot=n_boot),
+            locality={s: _mean([r.locality_rate for r in rs])
+                      for s, rs in by.items()},
+            deadline_frac={
+                s: _mean([r.deadlines_met / r.jobs_total for r in rs
+                          if r.jobs_total])
+                for s, rs in by.items()},
+            mean_makespan={s: _mean([r.makespan for r in rs])
+                           for s, rs in by.items()},
+        ))
+        if progress:
+            c = cells[-1]
+            progress(f"[{preset}/{shape}/{fabric}] proposed "
+                     f"{c.vs_fair.mean_gain_pct:+.1f}% -> {c.verdict()}, "
+                     f"adaptive {c.adaptive_vs_fair.mean_gain_pct:+.1f}% "
+                     f"-> {c.adaptive_verdict()}")
     return RegimeReport(presets=tuple(presets), shapes=tuple(shapes),
                         seeds=tuple(seeds), cells=cells,
-                        simulated=simulated, cached=cached)
+                        simulated=simulated, cached=cached,
+                        fabrics=(BASE_FABRIC,) + tuple(
+                            f for f in fabrics if f != BASE_FABRIC))

@@ -37,7 +37,7 @@ from repro.simcluster.traces import (PRESETS, Trace, TraceConfig, _dumps,
                                      trace_from_rows)
 
 CACHE_VERSION = 1
-SCHEDULERS = ("proposed", "fair", "fifo")
+SCHEDULERS = ("proposed", "adaptive", "fair", "fifo")
 
 
 @dataclass(frozen=True)
@@ -253,7 +253,7 @@ def run_experiment(spec: ExperimentSpec,
                          f"{rec_dict['wall_time_s']:.2f}s)")
 
     records.sort(key=lambda r: (r.trace_name, r.trace_seed,
-                                tuple(sorted(r.cluster.items())),
+                                _dumps(r.cluster),
                                 r.scheduler, r.seed))
     return SweepReport(spec_name=spec.name, records=records,
                        simulated=len(todo),

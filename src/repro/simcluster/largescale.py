@@ -138,7 +138,11 @@ def fleet_shape(name: str, replication: int = 1) -> ClusterSpec:
 
 
 def build_scheduler(kind: str, spec: ClusterSpec, *, legacy: bool = False):
-    """Scheduler factory over both engines (``legacy`` = frozen seed code)."""
+    """Scheduler factory over both engines (``legacy`` = frozen seed code).
+
+    ``adaptive`` is the proposed scheduler with the pressure-adaptive
+    reconfiguration policy switched on (``ClusterSpec.adaptive``); it has no
+    legacy counterpart — the frozen seed engine predates the policy."""
     if legacy:
         from repro.simcluster import _legacy as L
         if kind == "proposed":
@@ -155,6 +159,14 @@ def build_scheduler(kind: str, spec: ClusterSpec, *, legacy: bool = False):
         if kind == "proposed":
             return CompletionTimeScheduler(spec,
                                            Reconfigurator(spec, max_wait=30.0))
+        if kind == "adaptive":
+            import dataclasses
+            aspec = spec if spec.adaptive.enabled else dataclasses.replace(
+                spec, adaptive=dataclasses.replace(spec.adaptive, enabled=True))
+            sched = CompletionTimeScheduler(
+                aspec, Reconfigurator(aspec, max_wait=30.0))
+            sched.name = "adaptive"     # instance attr shadows the class name
+            return sched
         if kind == "fair":
             return FairScheduler(spec)
         if kind == "fifo":

@@ -179,7 +179,10 @@ class ClusterSim:
         if task.kind == TaskKind.MAP:
             base = prof.map_time
             if not local:
-                base *= 1.0 + prof.remote_penalty
+                # remote_penalty_scale calibrates the fabric (1GbE -> 40GbE);
+                # at the default 1.0 the product is bit-identical to the
+                # seed's bare `prof.remote_penalty` (x * 1.0 == x in IEEE754)
+                base *= 1.0 + prof.remote_penalty * self.spec.remote_penalty_scale
         else:
             # reduce = copy (one stream per mapper) + sort/reduce compute
             base = prof.reduce_time + job.spec.u_m * prof.shuffle_time_per_pair
@@ -303,6 +306,11 @@ class ClusterSim:
         # offers its freed core if a neighbour VM has a parked task waiting.
         if self.reconfig is not None and rt.task.kind == TaskKind.MAP:
             vm = rt.node
+            if self.reconfig.adaptive.enabled:
+                # release-interval hook: every map finish frees a core on vm
+                # (whether or not it is offered below) — feed the machine's
+                # core-free EWMA so park_decision can price the wait
+                self.reconfig.observe_core_free(vm, now)
             if (self.free_map(vm) > 0
                     and (self.reconfig.vcpus[vm] > self.spec.base_map_slots
                          or (isinstance(self.sched, CompletionTimeScheduler)

@@ -27,15 +27,33 @@ Invariants checked on every run:
   equals a full stable re-sort of the active jobs; the Fair scheduler's
   in-select deficit reinsertion keeps its entries list exactly sorted.
 
-The final test injects an off-by-one into the pending-map counter and
-asserts the recount catches it — the detection property itself is pinned.
+Adaptive-mode invariants (AdaptiveConfig enabled) extend the audit:
+
+* **rq_depth recount** — the incremental per-machine offer counter equals
+  ``len(rq[machine])``; an injected off-by-one is caught (pinned below).
+* **vCPU conservation** — ``total_vcpus`` (incl. in-flight plugs) equals
+  the static provisioning at every heartbeat, parks gated or not.
+* **pressure-EWMA agreement** — the offer/core-free EWMAs recomputed from
+  the full event history match the incrementally maintained values.
+* **per-park bound** — every adaptive park's wait bound lies inside
+  ``[max_wait_floor, max_wait_ceiling]`` (legacy mode: bound is None).
+* **park index** — every ``cancel_parked`` index entry points at a live AQ
+  entry of the right machine.
+* **map_open_jobs / overdue** — the map-phase-open counter and the lazy
+  overdue set equal from-scratch recomputations.
+
+The final tests inject off-by-ones (pending-map counter, locality counter,
+rq_depth) and assert the recount catches them — the detection property
+itself is pinned.
 """
 import bisect
+import math
 import random
 
 import pytest
 
 from repro.core.baselines import FairScheduler
+from repro.core.reconfigurator import Reconfigurator
 from repro.core.scheduler import CompletionTimeScheduler, SchedulerBase
 from repro.simcluster.sim import ClusterSim
 from test_parity_fuzz import build_scenario, _schedulers
@@ -57,6 +75,62 @@ class InvariantCheckedSim(ClusterSim):
         self._spec_seen = set()
         self._ever_parked = set()
         self.heartbeats_checked = 0
+        self.parks_audited = 0
+        if self.reconfig is not None:
+            self._instrument_reconfig()
+
+    def _instrument_reconfig(self):
+        """Wrap the pressure-signal feeds to keep a full event history, so
+        the incremental EWMAs can be recomputed from scratch, and audit
+        every park's wait bound at park time."""
+        rc = self.reconfig
+        m = self.spec.num_machines
+        self._offer_times = [[] for _ in range(m)]
+        self._free_times = [[] for _ in range(m)]
+
+        real_release = rc.release_core
+
+        def release_core(vm, now):
+            before = len(rc.rq[rc.spec.machine_of(vm)])
+            real_release(vm, now)
+            if len(rc.rq[rc.spec.machine_of(vm)]) > before \
+                    and rc.adaptive.enabled:
+                self._offer_times[rc.spec.machine_of(vm)].append(now)
+        rc.release_core = release_core
+
+        real_free = rc.observe_core_free
+
+        def observe_core_free(vm, now):
+            real_free(vm, now)
+            self._free_times[rc.spec.machine_of(vm)].append(now)
+        rc.observe_core_free = observe_core_free
+
+        real_park = rc.park_task
+
+        def park_task(task, target_vm, now, wait_bound=None):
+            real_park(task, target_vm, now, wait_bound=wait_bound)
+            entry = rc.aq[rc.spec.machine_of(target_vm)][-1]
+            a = rc.adaptive
+            if a.enabled:
+                if entry.wait_bound is None or not (
+                        a.max_wait_floor - 1e-12 <= entry.wait_bound
+                        <= a.max_wait_ceiling + 1e-12):
+                    raise InvariantViolation(
+                        f"park bound {entry.wait_bound} outside "
+                        f"[{a.max_wait_floor}, {a.max_wait_ceiling}]")
+            elif entry.wait_bound is not None:
+                raise InvariantViolation(
+                    "legacy park carries an adaptive wait bound")
+            self.parks_audited += 1
+        rc.park_task = park_task
+
+    def _ewma_from_scratch(self, times, alpha):
+        ewma = None
+        for prev, cur in zip(times, times[1:]):
+            sample = cur - prev
+            ewma = sample if ewma is None else (alpha * sample
+                                                + (1.0 - alpha) * ewma)
+        return ewma
 
     # -- launch-once + slot caps ------------------------------------------
     def _launch(self, launch, now, speculative=False):
@@ -97,6 +171,7 @@ class InvariantCheckedSim(ClusterSim):
         if self.reconfig is not None:
             # parked set snapshot before expiry/matching can drain it
             self._ever_parked.update(self.sched.parked)
+        self._now_checked = now
         self._check_counters()
         self.heartbeats_checked += 1
         super()._heartbeat(node, now)
@@ -139,6 +214,11 @@ class InvariantCheckedSim(ClusterSim):
                 raise InvariantViolation(f"{jid}: has_progress flag drift")
             if (jid in sched.active) != (not j.all_done):
                 raise InvariantViolation(f"{jid}: active-set membership drift")
+        expect_open = sum(1 for j in jobs if not j.map_done)
+        if sched.map_open_jobs != expect_open:
+            raise InvariantViolation(
+                f"map_open_jobs={sched.map_open_jobs} != recount "
+                f"{expect_open}")
         if isinstance(sched, CompletionTimeScheduler):
             expect_edf = sorted((j.absolute_deadline, j.seq, j.spec.job_id)
                                 for j in sched.active.values())
@@ -147,6 +227,56 @@ class InvariantCheckedSim(ClusterSim):
             if [e[2] for e in sched._edf] != [j.spec.job_id
                                               for j in sched._edf_jobs]:
                 raise InvariantViolation("_edf_jobs misaligned with _edf")
+        if self.reconfig is not None:
+            self._check_reconfig()
+
+    def _check_reconfig(self):
+        rc = self.reconfig
+        spec = self.spec
+        # incremental offer-depth counter vs recount
+        for m in range(spec.num_machines):
+            if rc.rq_depth[m] != len(rc.rq[m]):
+                raise InvariantViolation(
+                    f"rq_depth[{m}]={rc.rq_depth[m]} != recount "
+                    f"{len(rc.rq[m])}")
+        # vCPU conservation: gated parking must never mint or leak cores
+        provisioned = spec.num_nodes * spec.base_map_slots
+        if rc.total_vcpus != provisioned:
+            raise InvariantViolation(
+                f"total_vcpus={rc.total_vcpus} != provisioned {provisioned}")
+        # cancel index points at live AQ entries on the right machine
+        for task, (m, entry) in rc._parked_entry.items():
+            if not any(it is entry for it in rc.aq[m]):
+                raise InvariantViolation(
+                    f"park index maps {task} to a dead AQ entry")
+        # pressure EWMAs: incremental == recomputed-from-scratch
+        if rc.adaptive.enabled:
+            a = rc.adaptive.ewma_alpha
+            for m in range(spec.num_machines):
+                for name, times, have in (
+                        ("offer", self._offer_times[m], rc.offer_ewma[m]),
+                        ("free", self._free_times[m], rc.free_ewma[m])):
+                    want = self._ewma_from_scratch(times, a)
+                    if (want is None) != (have is None) or (
+                            want is not None
+                            and not math.isclose(want, have,
+                                                 rel_tol=1e-12, abs_tol=0.0)):
+                        raise InvariantViolation(
+                            f"{name}_ewma[{m}]={have} != recomputed {want}")
+        if isinstance(self.sched, CompletionTimeScheduler) \
+                and self.sched.adaptive.enabled:
+            sched = self.sched
+            # the lazy overdue set, once synced to "now", equals a
+            # from-scratch scan of the active jobs (heartbeat `now` is the
+            # newest time the scheduler has seen)
+            now = self._now_checked
+            sched._sync_overdue(now)
+            expect = {jid for jid, j in sched.active.items()
+                      if j.absolute_deadline < now}
+            if sched.overdue != expect:
+                raise InvariantViolation(
+                    f"overdue set {sorted(sched.overdue)} != recount "
+                    f"{sorted(expect)}")
 
 
 def run_checked(scenario_seed: int, scheduler: str = None):
@@ -240,3 +370,48 @@ def test_injected_local_counter_bug_is_caught(monkeypatch):
     monkeypatch.setattr(SchedulerBase, "_drop_pending_map", buggy_drop)
     with pytest.raises(InvariantViolation, match="local_pending_count"):
         run_checked(424242, "proposed")
+
+
+# -- adaptive-mode invariants ------------------------------------------------
+
+def test_adaptive_invariants_hold_on_random_runs():
+    """The full audit (vCPU conservation, rq_depth recounts, EWMA
+    agreement, park-bound clamps, park index, overdue recount) over random
+    adaptive-ON scenarios — fuzzed knobs included via build_scenario."""
+    parks = 0
+    for k in range(N_RUNS):
+        sim, result = run_checked(868600 + k, "adaptive")
+        parks += sim.parks_audited
+        assert all(j.finish_time is not None for j in result.jobs.values())
+    assert parks > 0          # the bound audit actually exercised parking
+
+
+def test_legacy_mode_park_bounds_are_none():
+    """Adaptive-off runs park with wait_bound=None (fixed max_wait path) —
+    the audit in the instrumented sim raises otherwise."""
+    parks = 0
+    for k in range(6):
+        sim, _ = run_checked(525200 + k, "proposed")
+        parks += sim.parks_audited
+    assert parks > 0
+
+
+def test_injected_rq_depth_bug_is_caught(monkeypatch):
+    """Acceptance pin: an off-by-one in the incremental RQ-depth counter
+    must be flagged by the per-heartbeat recount."""
+    real_release = Reconfigurator.release_core
+    state = {"calls": 0}
+
+    def buggy_release(self, vm, now):
+        before = len(self.rq[self.spec.machine_of(vm)])
+        real_release(self, vm, now)
+        m = self.spec.machine_of(vm)
+        if len(self.rq[m]) > before:
+            state["calls"] += 1
+            if state["calls"] == 2:
+                self.rq_depth[m] += 1          # the injected off-by-one
+    monkeypatch.setattr(Reconfigurator, "release_core", buggy_release)
+    with pytest.raises(InvariantViolation, match="rq_depth"):
+        for k in range(40):                    # scan until a scenario parks
+            run_checked(909000 + k, "proposed")
+    assert state["calls"] >= 2

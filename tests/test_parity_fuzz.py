@@ -22,7 +22,17 @@ scheduled by the legacy engine while the indexed engine revives the chains
 — a documented behavioural fix, not a parity bug.  Nothing can finish
 before ~15 s (first heartbeat ≥3 s + shortest map ≥ ~14 s), so a ≤12 s
 window keeps both engines on the common semantics the contract covers.
+
+Every scenario also fuzzes the **AdaptiveConfig knobs with
+``enabled=False``** — the parity contract pins that carrying arbitrary
+adaptive settings (disabled) cannot perturb a single decision.  A separate
+adaptive-ON differential suite (``REPRO_ADAPTIVE_FUZZ_SCENARIOS``, default
+60) has no legacy counterpart; it pins the liveness contract instead:
+every job finishes, every task completes exactly once, and the park ledger
+balances — parked = matched + expired + (stale AQ entries whose task
+already completed), i.e. adaptive parking never strands a task.
 """
+import dataclasses
 import os
 import random
 
@@ -31,7 +41,7 @@ import pytest
 from repro.core.baselines import FairScheduler, FIFOScheduler
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.scheduler import CompletionTimeScheduler
-from repro.core.types import ClusterSpec
+from repro.core.types import AdaptiveConfig, ClusterSpec
 from repro.simcluster._legacy import (LegacyClusterSim,
                                       LegacyCompletionTimeScheduler,
                                       LegacyFairScheduler,
@@ -47,6 +57,7 @@ except ImportError:                     # pragma: no cover - env-dependent
     hypothesis = None
 
 N_SCENARIOS = int(os.environ.get("REPRO_FUZZ_SCENARIOS", "200"))
+N_ADAPTIVE = int(os.environ.get("REPRO_ADAPTIVE_FUZZ_SCENARIOS", "60"))
 BASE_SEED = int(os.environ.get("REPRO_FUZZ_SEED", "0"))
 CHUNKS = 8
 SUBMIT_WINDOW_S = 12.0                  # see module docstring
@@ -60,6 +71,28 @@ if hypothesis is not None:
     settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "tier1"))
 
 
+def fuzz_adaptive_config(rng: random.Random,
+                         enabled: bool = False) -> AdaptiveConfig:
+    """Random-but-valid AdaptiveConfig; ``enabled=False`` for the parity
+    suite (knob values must be inert while disabled)."""
+    floor = round(rng.uniform(1.0, 8.0), 2)
+    return AdaptiveConfig(
+        enabled=enabled,
+        max_wait_floor=floor,
+        max_wait_ceiling=round(floor + rng.uniform(5.0, 50.0), 2),
+        ewma_alpha=round(rng.uniform(0.05, 0.9), 3),
+        breakeven_margin=round(rng.uniform(0.5, 2.0), 2),
+        fail_streak_limit=rng.randint(1, 4),
+        fail_cooldown=round(rng.uniform(5.0, 60.0), 1),
+        outcome_alpha=round(rng.uniform(0.05, 0.5), 3),
+        park_win_floor=round(rng.uniform(0.0, 0.8), 2),
+        park_active_factor=round(rng.uniform(0.1, 1.2), 2),
+        park_min_width=round(rng.uniform(0.0, 24.0), 1),
+        overload_pending_factor=round(rng.uniform(0.05, 1.5), 2),
+        overload_active_factor=round(rng.uniform(0.1, 1.5), 2),
+    )
+
+
 def build_scenario(rng: random.Random):
     """One random scenario: cluster shape, job mix, sim + scheduler knobs.
     Everything is drawn from ``rng``, so a scenario is reproducible from its
@@ -68,7 +101,8 @@ def build_scenario(rng: random.Random):
     vms = rng.randint(1, 2)
     nodes = machines * vms
     spec = ClusterSpec(num_machines=machines, vms_per_machine=vms,
-                       replication=rng.randint(1, min(2, nodes)))
+                       replication=rng.randint(1, min(2, nodes)),
+                       adaptive=fuzz_adaptive_config(rng))
     n_jobs = rng.randint(1, 6)
     submits = sorted(round(rng.uniform(0.0, SUBMIT_WINDOW_S), 2)
                      for _ in range(n_jobs))
@@ -104,6 +138,14 @@ def _schedulers(sc):
             spec, LegacyReconfigurator(spec, max_wait=sc["max_wait"]))
         old.park_depth = sc["park_depth"]
         return new, old
+    if sc["scheduler"] == "adaptive":
+        # pressure-adaptive mode: new engine only (no legacy counterpart)
+        aspec = dataclasses.replace(
+            spec, adaptive=dataclasses.replace(spec.adaptive, enabled=True))
+        new = CompletionTimeScheduler(
+            aspec, Reconfigurator(aspec, max_wait=sc["max_wait"]))
+        new.park_depth = sc["park_depth"]
+        return new, None
     if sc["scheduler"] == "fair":
         return FairScheduler(spec), LegacyFairScheduler(spec)
     return FIFOScheduler(spec), LegacyFIFOScheduler(spec)
@@ -140,6 +182,7 @@ def assert_scenario_parity(sc):
                 == res_old.reconfig_stats.get(key))
 
 
+@pytest.mark.fuzz
 @pytest.mark.parametrize("chunk", range(CHUNKS))
 def test_fuzz_parity_deterministic(chunk):
     """The canonical ≥200-scenario sweep: deterministic per
@@ -160,6 +203,7 @@ def test_fuzz_parity_deterministic(chunk):
             ) from e
 
 
+@pytest.mark.fuzz
 @pytest.mark.skipif(hypothesis is None,
                     reason="hypothesis not installed (pip install .[test])")
 def test_fuzz_parity_hypothesis():
@@ -171,3 +215,106 @@ def test_fuzz_parity_hypothesis():
         assert_scenario_parity(build_scenario(random.Random(scenario_seed)))
 
     check()
+
+
+# ---------------------------------------------------------------------------
+# adaptive-ON differential suite: liveness, not parity
+# ---------------------------------------------------------------------------
+
+def run_adaptive(sc):
+    """Run the scenario on the new engine with adaptive mode ON (fuzzed
+    enabled knobs) and return (result, scheduler)."""
+    sc = dict(sc)
+    sc["scheduler"] = "adaptive"
+    sched, _ = _schedulers(sc)
+    sim = ClusterSim(sc["spec"], sched, seed=sc["sim_seed"],
+                     straggler_prob=sc["straggler_prob"],
+                     straggler_factor=sc["straggler_factor"],
+                     speculative=sc["speculative"],
+                     speculation_threshold=sc["speculation_threshold"])
+    return sim.run([j for j in sc["jobs"]]), sched
+
+
+def assert_adaptive_liveness(sc):
+    """Adaptive parking must never strand a task: every job finishes, every
+    task completes exactly once, and every park leaves its AQ through a
+    match, an expiry, or as a stale reservation whose task already ran."""
+    res, sched = run_adaptive(sc)
+    for jid, job in res.jobs.items():
+        assert job.finish_time is not None, f"{jid} never finished"
+        assert len(job.completed_map) == job.spec.u_m, jid
+        assert len(job.completed_reduce) == job.spec.v_r, jid
+    # the park ledger balances: entries still queued are stale reservations
+    # of tasks that already completed — never a pending task left behind
+    rc = sched.reconfig
+    leftover = [item for q in rc.aq for item in q]
+    stats = res.reconfig_stats
+    assert stats["parked"] == (stats["reconfigurations"] + stats["expired"]
+                               + len(leftover))
+    for item in leftover:
+        job = res.jobs[item.task.job_id]
+        assert item.task.index in job.completed_map, (
+            f"stranded parked task {item.task}")
+    assert not rc.in_flight                 # no plug left hanging
+    # adaptive-off completes the same task set (differential completeness)
+    sc_off = dict(sc)
+    sc_off["scheduler"] = "proposed"
+    sched_off, _ = _schedulers(sc_off)
+    res_off = ClusterSim(sc["spec"], sched_off, seed=sc["sim_seed"],
+                         straggler_prob=sc["straggler_prob"],
+                         straggler_factor=sc["straggler_factor"],
+                         speculative=sc["speculative"],
+                         speculation_threshold=sc["speculation_threshold"]
+                         ).run([j for j in sc["jobs"]])
+    assert set(res.jobs) == set(res_off.jobs)
+    for jid, job in res_off.jobs.items():
+        assert job.completed_map == res.jobs[jid].completed_map, jid
+        assert job.completed_reduce == res.jobs[jid].completed_reduce, jid
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("chunk", range(CHUNKS))
+def test_fuzz_adaptive_never_strands(chunk):
+    """Adaptive-ON sweep over REPRO_ADAPTIVE_FUZZ_SCENARIOS generated
+    scenarios (fuzzed enabled knobs): the liveness/ledger contract above."""
+    per_chunk = (N_ADAPTIVE + CHUNKS - 1) // CHUNKS
+    start = chunk * per_chunk
+    for k in range(start, min(start + per_chunk, N_ADAPTIVE)):
+        scenario_seed = BASE_SEED * 7_000_003 + k
+        sc = build_scenario(random.Random(scenario_seed))
+        try:
+            assert_adaptive_liveness(sc)
+        except AssertionError as e:
+            raise AssertionError(
+                f"adaptive liveness broken for scenario seed={scenario_seed} "
+                f"({sc['spec'].num_machines}x{sc['spec'].vms_per_machine}, "
+                f"{len(sc['jobs'])} jobs): {e}") from e
+
+
+def _run_proposed(sc):
+    sched, _ = _schedulers(sc)
+    return ClusterSim(sc["spec"], sched, seed=sc["sim_seed"],
+                      straggler_prob=sc["straggler_prob"],
+                      straggler_factor=sc["straggler_factor"],
+                      speculative=sc["speculative"],
+                      speculation_threshold=sc["speculation_threshold"]
+                      ).run([j for j in sc["jobs"]])
+
+
+@pytest.mark.fuzz
+def test_adaptive_off_is_default_and_inert():
+    """AdaptiveConfig defaults to off, and a disabled config with wild
+    knobs produces the identical run (same RNG draws, same decisions) as
+    the default config."""
+    assert AdaptiveConfig().enabled is False
+    sc = build_scenario(random.Random(90210))
+    sc["scheduler"] = "proposed"
+    res_knobs = _run_proposed(sc)
+    sc_plain = dict(sc)
+    sc_plain["spec"] = dataclasses.replace(sc["spec"],
+                                           adaptive=AdaptiveConfig())
+    sc_plain["jobs"] = [j for j in sc["jobs"]]
+    res_plain = _run_proposed(sc_plain)
+    assert res_knobs.makespan == res_plain.makespan
+    assert {j: r.finish_time for j, r in res_knobs.jobs.items()} \
+        == {j: r.finish_time for j, r in res_plain.jobs.items()}

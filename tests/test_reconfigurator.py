@@ -1,6 +1,10 @@
-"""Algorithm-1 AQ/RQ machinery invariants."""
+"""Algorithm-1 AQ/RQ machinery invariants + the pressure-adaptive policy."""
+import dataclasses
+
+import pytest
+
 from repro.core.reconfigurator import Reconfigurator
-from repro.core.types import ClusterSpec, TaskId, TaskKind
+from repro.core.types import AdaptiveConfig, ClusterSpec, TaskId, TaskKind
 
 
 def _t(i):
@@ -11,6 +15,14 @@ def make():
     spec = ClusterSpec(num_machines=4, vms_per_machine=2, base_map_slots=2,
                        max_vcpus_per_vm=4, min_vcpus_per_vm=1,
                        hotplug_latency=0.5)
+    return spec, Reconfigurator(spec, max_wait=10.0)
+
+
+def make_adaptive(**over):
+    cfg = AdaptiveConfig(enabled=True, **over)
+    spec = ClusterSpec(num_machines=4, vms_per_machine=2, base_map_slots=2,
+                       max_vcpus_per_vm=4, min_vcpus_per_vm=1,
+                       hotplug_latency=0.5, adaptive=cfg)
     return spec, Reconfigurator(spec, max_wait=10.0)
 
 
@@ -67,3 +79,156 @@ def test_max_vcpus_cap():
     rc.park_task(_t(0), 0, 0.0)
     rc.release_core(1, 0.0)
     assert rc.match(0.0) == []                     # target saturated
+
+
+# -- cancel_parked: O(1) index over a populated multi-machine state ----------
+
+def test_cancel_parked_multi_machine():
+    spec, rc = make()
+    # two entries on machine 0, one on machine 1, one on machine 3
+    rc.park_task(_t(0), 0, 0.0)
+    rc.park_task(_t(1), 1, 1.0)
+    rc.park_task(_t(2), 2, 2.0)
+    rc.park_task(_t(3), 7, 3.0)
+    assert rc.cancel_parked(_t(1)) is True         # middle of machine 0's AQ
+    assert [it.task for it in rc.aq[0]] == [_t(0)]
+    assert [it.task for it in rc.aq[1]] == [_t(2)]
+    assert [it.task for it in rc.aq[3]] == [_t(3)]
+    assert rc.cancel_parked(_t(1)) is False        # already gone
+    assert rc.cancel_parked(TaskId("x", TaskKind.MAP, 9)) is False
+    # cancelled entries are skipped by expiry; the others still expire
+    out = rc.expire_stale(30.0)
+    assert sorted(p.task.index for p in out) == [0, 2, 3]
+    assert rc.stats["expired"] == 3
+    assert all(not q for q in rc.aq)
+    assert rc._parked_entry == {}
+
+
+def test_cancel_parked_entry_not_matched_later():
+    spec, rc = make()
+    rc.park_task(_t(0), 0, 0.0)
+    assert rc.cancel_parked(_t(0)) is True
+    rc.release_core(1, 0.0)
+    assert rc.match(0.0) == []                     # nothing left to pair
+
+
+# -- adaptive pressure signals ------------------------------------------------
+
+def test_offer_ewma_tracks_release_intervals():
+    spec, rc = make_adaptive(ewma_alpha=0.5)
+    rc.release_core(0, 0.0)
+    assert rc.offer_ewma[0] is None and rc.last_offer[0] == 0.0
+    rc.release_core(1, 4.0)
+    assert rc.offer_ewma[0] == 4.0                 # first interval
+    rc.release_core(0, 10.0)
+    assert rc.offer_ewma[0] == 0.5 * 6.0 + 0.5 * 4.0
+    assert rc.last_offer[0] == 10.0
+    assert rc.offer_ewma[1] is None                # other machines untouched
+
+
+def test_observe_core_free_feeds_free_ewma():
+    spec, rc = make_adaptive(ewma_alpha=0.25)
+    rc.observe_core_free(2, 1.0)                   # machine 1
+    rc.observe_core_free(3, 5.0)
+    rc.observe_core_free(2, 6.0)
+    assert rc.free_ewma[1] == 0.25 * 1.0 + 0.75 * 4.0
+    assert rc.free_ewma[0] is None
+
+
+def test_predicted_core_wait_paths():
+    spec, rc = make_adaptive()
+    assert rc.predicted_core_wait(0, 0.0) is None          # no signal yet
+    rc.observe_core_free(0, 0.0)
+    rc.observe_core_free(1, 6.0)
+    assert rc.predicted_core_wait(0, 6.0) == 6.0           # free EWMA alone
+    rc.park_task(_t(0), 0, 6.0)                            # AQ depth scales it
+    assert rc.predicted_core_wait(0, 6.0) == 12.0
+    rc.release_core(2, 7.0)                                # live offer on m1
+    assert rc.predicted_core_wait(1, 7.0) == spec.hotplug_latency
+
+
+def test_park_decision_gates_and_bounds():
+    spec, rc = make_adaptive(max_wait_floor=2.0, max_wait_ceiling=8.0,
+                             fail_streak_limit=2, breakeven_margin=1.0)
+    # no signal: park with the fixed max_wait clamped into [floor, ceiling]
+    ok, bound = rc.park_decision(0, 0.0, breakeven=30.0)
+    assert ok and bound == 8.0                     # max_wait 10 -> ceiling
+    # predicted wait beyond the break-even: decline
+    rc.observe_core_free(0, 0.0)
+    rc.observe_core_free(1, 50.0)                  # free interval 50s
+    ok, _ = rc.park_decision(0, 50.0, breakeven=20.0)
+    assert not ok and rc.stats["park_declined"] == 1
+    # fail streak at the limit: decline regardless of signals
+    rc.fail_streak[2] = 2
+    ok, _ = rc.park_decision(2, 0.0, breakeven=1e9)
+    assert not ok
+    # cool-down earns a fresh probe at floor patience
+    rc.last_fail[2] = 0.0
+    ok, bound = rc.park_decision(2, 100.0, breakeven=1e9)
+    assert ok and bound == 2.0 and rc.fail_streak[2] == 0
+
+
+def test_note_park_outcome_updates_streak_and_ewma():
+    spec, rc = make_adaptive(outcome_alpha=0.5, fail_streak_limit=2)
+    rc.park_task(_t(0), 0, 0.0)
+    rc.note_park_outcome(_t(0), 5.0, won=False)
+    assert rc.fail_streak[0] == 1 and rc.last_fail[0] == 5.0
+    assert rc.park_outcome_ewma == 0.5             # 0.5*0 + 0.5*1.0
+    assert rc.stats["park_losses"] == 1
+    # a later win resets the machine and restores full patience
+    rc.park_task(_t(1), 1, 6.0)                    # same machine 0
+    rc.note_park_outcome(_t(1), 8.0, won=True)
+    assert rc.fail_streak[0] == 0 and rc.last_fail[0] is None
+    assert rc.park_outcome_ewma == 0.75
+    assert rc.stats["park_wins"] == 1
+    # outcomes for tasks the reconfigurator never saw are ignored
+    rc.note_park_outcome(TaskId("zz", TaskKind.MAP, 0), 9.0, won=False)
+    assert rc.stats["park_losses"] == 1
+
+
+def test_global_win_floor_suspends_parking_with_probes():
+    spec, rc = make_adaptive(outcome_alpha=1.0, park_win_floor=0.5,
+                             fail_cooldown=10.0, max_wait_floor=3.0)
+    rc.park_task(_t(0), 0, 0.0)
+    rc.note_park_outcome(_t(0), 1.0, won=False)    # ewma -> 0.0
+    assert rc.park_outcome_ewma == 0.0
+    ok, bound = rc.park_decision(2, 2.0, breakeven=1e9)   # fresh machine
+    assert ok and bound == 3.0                     # first probe, floor bound
+    ok, _ = rc.park_decision(2, 5.0, breakeven=1e9)
+    assert not ok                                  # within the probe cooldown
+    ok, _ = rc.park_decision(2, 20.0, breakeven=1e9)
+    assert ok                                      # cooldown elapsed: probe
+
+
+def test_expire_uses_per_park_bounds_when_adaptive():
+    spec, rc = make_adaptive(max_wait_floor=2.0, max_wait_ceiling=40.0)
+    rc.park_task(_t(0), 0, 0.0, wait_bound=3.0)
+    rc.park_task(_t(1), 2, 0.0, wait_bound=20.0)
+    assert rc.expire_stale(2.5) == []
+    out = rc.expire_stale(3.5)                     # only the 3s bound passed
+    assert [p.task for p in out] == [_t(0)]
+    out = rc.expire_stale(21.0)
+    assert [p.task for p in out] == [_t(1)]
+
+
+def test_adaptive_default_bound_clamped():
+    spec, rc = make_adaptive(max_wait_floor=2.0, max_wait_ceiling=6.0)
+    rc.park_task(_t(0), 0, 0.0)                    # no explicit bound
+    entry = rc.aq[0][0]
+    assert entry.wait_bound == 6.0                 # max_wait 10 -> ceiling
+
+
+def test_adaptive_config_validation():
+    with pytest.raises(ValueError, match="max_wait_ceiling"):
+        AdaptiveConfig(max_wait_floor=10.0, max_wait_ceiling=5.0)
+    with pytest.raises(ValueError, match="ewma_alpha"):
+        AdaptiveConfig(ewma_alpha=0.0)
+    with pytest.raises(ValueError, match="park_win_floor"):
+        AdaptiveConfig(park_win_floor=1.5)
+    with pytest.raises(ValueError, match="overload entry factors"):
+        AdaptiveConfig(overload_active_factor=0.0)
+    # serialization round-trips through ClusterSpec
+    spec = ClusterSpec(adaptive=AdaptiveConfig(enabled=True,
+                                               park_min_width=7.0))
+    again = ClusterSpec.from_dict(spec.to_dict())
+    assert again == spec and again.adaptive.park_min_width == 7.0

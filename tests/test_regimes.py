@@ -1,4 +1,5 @@
-"""Regime atlas: spec construction, report distillation, caching, rendering.
+"""Regime atlas: spec construction, report distillation, caching, rendering,
+and the adaptive-policy regression pins on the --quick sub-grid.
 
 Full-size atlas cells are exercised by `python -m repro.experiments regimes
 --quick` (and the committed EXPERIMENTS.md); here a small preset at the
@@ -8,23 +9,34 @@ import json
 
 import pytest
 
-from repro.experiments.regimes import (FULL_SHAPES, QUICK_SEEDS, QUICK_SHAPES,
+from repro.core.types import ClusterSpec
+from repro.experiments.regimes import (BASE_FABRIC, FABRICS, FULL_FABRICS,
+                                       FULL_SHAPES, QUICK_SEEDS, QUICK_SHAPES,
                                        REGIME_PRESETS, SCHEDULERS,
                                        RegimeReport, regime_spec, run_regimes,
                                        scaled_jobs)
+from repro.experiments.runner import (ExperimentSpec, TraceRef,
+                                      run_experiment)
+from repro.experiments.stats import compare_throughput
 from repro.simcluster.largescale import FLEET_SHAPES, fleet_shape
 from repro.simcluster.traces import PRESETS
 
 
 def test_atlas_grid_covers_acceptance_floor():
-    """≥4 presets x ≥2 shapes x 3 schedulers x ≥8 paired seeds."""
+    """≥4 presets x ≥2 shapes x 4 schedulers x ≥8 paired seeds, plus the
+    remote-penalty fabric axis."""
     assert len(REGIME_PRESETS) >= 4
     assert len(QUICK_SHAPES) >= 2 and len(FULL_SHAPES) >= 3
-    assert set(SCHEDULERS) == {"proposed", "fair", "fifo"}
+    assert set(SCHEDULERS) == {"proposed", "adaptive", "fair", "fifo"}
     from repro.experiments.regimes import FULL_SEEDS
     assert len(FULL_SEEDS) >= 8
     assert set(QUICK_SHAPES) <= set(FULL_SHAPES)   # quick is a sub-grid
     assert set(QUICK_SEEDS) <= set(FULL_SEEDS)
+    assert set(FABRICS) == {"1GbE", "10GbE", "40GbE"}
+    assert FABRICS[BASE_FABRIC] == 1.0
+    assert set(FULL_FABRICS) <= set(FABRICS)
+    # fabric scales decrease with link speed
+    assert FABRICS["1GbE"] > FABRICS["10GbE"] > FABRICS["40GbE"]
 
 
 def test_scaled_jobs_tracks_fleet_size():
@@ -44,28 +56,35 @@ def test_fleet_shape_lookup():
 def test_regime_spec_pairs_all_schedulers():
     spec = regime_spec("bursty", "20x2", seeds=(0, 1))
     assert spec.schedulers == SCHEDULERS
-    assert spec.n_cells() == 1 * 1 * 3 * 2
+    assert spec.n_cells() == 1 * 1 * 4 * 2
     # trace seed coupled to sim seed: placements re-roll per replication
     ref = spec.traces[0]
     assert ref.seed is None
     assert ref.config.num_jobs == scaled_jobs("bursty", 20)
+    # base fabric leaves the cluster untouched; others scale the penalty
+    assert spec.clusters[0].remote_penalty_scale == 1.0
+    fab = regime_spec("bursty", "20x2", seeds=(0,), fabric="10GbE")
+    assert fab.clusters[0].remote_penalty_scale == FABRICS["10GbE"]
 
 
 def test_run_regimes_report_and_cache(tmp_path):
     report = run_regimes(presets=("mix_small",), shapes=("20x2",),
                          seeds=(0, 1), cache_dir=tmp_path / "cache",
                          n_boot=200)
-    assert report.simulated == 6 and report.cached == 0
+    assert report.simulated == 8 and report.cached == 0
     (cell,) = report.cells
     assert cell.verdict() in ("win", "loss", "tie")
+    assert cell.adaptive_verdict() in ("win", "loss", "tie")
+    assert cell.fabric == BASE_FABRIC
     assert cell.vs_fair.n_pairs == 2 and cell.vs_fifo.n_pairs == 2
+    assert cell.adaptive_vs_fair.n_pairs == 2
     assert set(cell.locality) == set(SCHEDULERS)
     assert all(0.0 <= v <= 1.0 for v in cell.deadline_frac.values())
     # rerun: pure cache hit
     again = run_regimes(presets=("mix_small",), shapes=("20x2",),
                         seeds=(0, 1), cache_dir=tmp_path / "cache",
                         n_boot=200)
-    assert again.simulated == 0 and again.cached == 6
+    assert again.simulated == 0 and again.cached == 8
     assert again.cells[0].to_dict() == cell.to_dict()
     # machine-readable report round-trips through JSON
     out = report.save_json(tmp_path / "report.json")
@@ -73,7 +92,76 @@ def test_run_regimes_report_and_cache(tmp_path):
     assert loaded["cells"][0]["throughput_vs_fair"]["ci_lo_pct"] \
         <= loaded["cells"][0]["throughput_vs_fair"]["ci_hi_pct"]
     assert loaded["cells"][0]["verdict"] == cell.verdict()
+    assert loaded["cells"][0]["adaptive_verdict"] == cell.adaptive_verdict()
+    assert loaded["fabrics"] == ["1GbE"]
     # renders
-    assert "vs fair" in report.format()
+    assert "adapt" in report.format()
     md = report.to_markdown()
     assert md.startswith("| regime |") and "mix_small" in md
+    assert "adaptive vs fair" in md
+
+
+def test_fabric_axis_extends_grid_and_reuses_cache(tmp_path):
+    base = run_regimes(presets=("mix_small",), shapes=("20x2",),
+                       seeds=(0,), cache_dir=tmp_path / "cache", n_boot=100)
+    assert base.simulated == 4
+    fab = run_regimes(presets=("mix_small",), shapes=("20x2",),
+                      seeds=(0,), fabrics=("10GbE",),
+                      cache_dir=tmp_path / "cache", n_boot=100)
+    # base cells reused; only the 10GbE cell simulates
+    assert fab.simulated == 4 and fab.cached == 4
+    assert [c.fabric for c in fab.cells] == ["1GbE", "10GbE"]
+    assert fab.fabrics == ("1GbE", "10GbE")
+    assert fab.cell("mix_small", "20x2", "10GbE").fabric == "10GbE"
+    with pytest.raises(KeyError):
+        fab.cell("mix_small", "20x2", "40GbE")
+    with pytest.raises(ValueError, match="unknown fabric"):
+        run_regimes(presets=("mix_small",), shapes=("20x2",), seeds=(0,),
+                    fabrics=("100GbE",), cache_dir=tmp_path / "cache")
+
+
+# -- the flipped loss cell must not silently regress -------------------------
+
+@pytest.fixture(scope="module")
+def quick_cells(tmp_path_factory):
+    """The --quick-compatible diurnal/20x2 cell + the paper closed mix,
+    simulated once for both regression pins below."""
+    cache = tmp_path_factory.mktemp("atlas-cache")
+    diurnal = ExperimentSpec(
+        name="pin-diurnal",
+        traces=(regime_spec("diurnal", "20x2").traces[0],),
+        clusters=(fleet_shape("20x2"),),
+        schedulers=("proposed", "adaptive", "fair"),
+        seeds=QUICK_SEEDS,
+    )
+    paper = ExperimentSpec(
+        name="pin-paper",
+        traces=(TraceRef(preset="paper"),),
+        clusters=(ClusterSpec(replication=1),),
+        schedulers=("proposed", "adaptive", "fair"),
+        seeds=QUICK_SEEDS,
+    )
+    return (run_experiment(diurnal, cache).by_scheduler(),
+            run_experiment(paper, cache).by_scheduler())
+
+
+def test_adaptive_flips_diurnal_loss_cell(quick_cells):
+    """On the diurnal/20x2 loss cell the adaptive policy must beat the
+    fixed policy outright and sit within noise of Fair (the committed
+    8-seed atlas shows the full flip; this pin is the fast canary)."""
+    by, _ = quick_cells
+    vs_proposed = compare_throughput(by["proposed"], by["adaptive"])
+    vs_fair = compare_throughput(by["fair"], by["adaptive"])
+    assert vs_proposed.mean_gain_pct > 5.0     # measured ~+12.6%
+    assert vs_fair.mean_gain_pct > -3.0        # measured ~-0.7%
+
+
+def test_adaptive_preserves_closed_mix_win(quick_cells):
+    """On the paper's closed mix the adaptive policy must keep the
+    throughput win over Fair (the latch and gates must never fire there)
+    and stay within noise of the fixed policy."""
+    _, by = quick_cells
+    vs_fair = compare_throughput(by["fair"], by["adaptive"])
+    vs_proposed = compare_throughput(by["proposed"], by["adaptive"])
+    assert vs_fair.mean_gain_pct > 10.0        # measured ~+22.1%
+    assert vs_proposed.mean_gain_pct > -30.0   # measured ~-15%, noisy cell
