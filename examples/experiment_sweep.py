@@ -3,11 +3,27 @@
 Drives ``python -m repro.experiments`` exactly as a user would:
 
 1. ``generate`` — synthesize a bursty 20-job trace to JSONL;
-2. ``run``      — sweep it over 2 schedulers x 3 seeds on a 10x2 cluster
+2. ``run``      — sweep it over 2 policies x 3 seeds on a 10x2 cluster
                   (6 simulations, cached on disk);
-3. ``run`` again — the same grid is served entirely from the cache;
+3. ``run`` again — the same grid is served entirely from the cache, and a
+                  ``PolicySpec``-style inline policy JSON (the ``delay``
+                  baseline with a custom ``locality_delay``) extends the
+                  grid, simulating only the new cells;
 4. ``compare``  — paired-bootstrap comparison of proposed vs fair;
-5. ``paper --quick`` — the paper's §5 evaluation at reporting depth.
+5. ``policies`` — the registered policy table + smoke run;
+6. ``paper --quick`` — the paper's §5 evaluation at reporting depth.
+
+The same grid is expressible in-process with the first-class policy API::
+
+    from repro.core.policies import PolicySpec
+    from repro.experiments.runner import ExperimentSpec, TraceRef
+    spec = ExperimentSpec(
+        name="sweep",
+        traces=(TraceRef(path="trace.jsonl"),),
+        clusters=(ClusterSpec(num_machines=10, vms_per_machine=2),),
+        schedulers=("proposed",                       # preset name
+                    PolicySpec("delay", {"locality_delay": 4})),
+        seeds=(0, 1, 2))
 
 Everything lands in a temp directory and the whole script stays well under
 a minute::
@@ -53,15 +69,25 @@ def main() -> int:
         out = cli(work, "run", *grid, "--schedulers", "proposed", "fair")
         assert "6 simulated, 0 cached" in out, out
 
-        print("\n== 3. re-run: zero new simulations ==")
+        print("\n== 3. re-run: zero new simulations; an inline policy JSON "
+              "extends the grid ==")
         out = cli(work, "run", *grid, "--schedulers", "proposed", "fair")
         assert "0 simulated, 6 cached" in out, out
+        out = cli(work, "run", *grid, "--schedulers", "proposed", "fair",
+                  "--policy", '{"name": "delay", "params": '
+                              '{"locality_delay": 4}}')
+        assert "3 simulated, 6 cached" in out, out
+        assert "delay[locality_delay=4]" in out, out
 
         print("\n== 4. paired comparison (reuses the same cache) ==")
         out = cli(work, "compare", *grid, "--a", "fair", "--b", "proposed")
         assert "95% CI" in out, out
 
-        print("\n== 5. the paper evaluation, quick preset ==")
+        print("\n== 5. the registered policy table + smoke ==")
+        out = cli(work, "policies", "--smoke")
+        assert "policy smoke passed" in out, out
+
+        print("\n== 6. the paper evaluation, quick preset ==")
         cli(work, "paper", "--quick", "--cache", "paper-cache")
 
     print(f"\nall done in {time.time() - t0:.1f}s")

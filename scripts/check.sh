@@ -37,6 +37,9 @@ if [[ "${SKIP_TESTS:-0}" != "1" ]]; then
     python -m pytest -x -q -m fuzz
 fi
 
+echo "== policy smoke (every registered policy on a tiny cluster) =="
+python -m repro.experiments policies --smoke
+
 echo "== quick sim benchmark =="
 python benchmarks/bench_sim.py --quick --out "$QUICK_OUT"
 

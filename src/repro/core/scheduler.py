@@ -62,6 +62,15 @@ class SchedulerBase:
 
     name = "base"
     uses_reconfig = False
+    # set by PolicySpec.build: the spec this instance was constructed from
+    policy = None
+
+    @classmethod
+    def from_policy(cls, policy, spec: ClusterSpec):
+        """Construct a scheduler from a policy value (a ``PolicySpec``, a
+        registered name, or policy JSON/dict) — see ``repro.core.policies``."""
+        from repro.core.policies import build_policy
+        return build_policy(policy, spec)
 
     def __init__(self, spec: ClusterSpec):
         self.spec = spec
@@ -209,19 +218,36 @@ class CompletionTimeScheduler(SchedulerBase):
     name = "proposed"
     uses_reconfig = True
 
+    #: overload-policy vocabulary (the policy registry's ``overload`` axis):
+    #: ``none`` never enters the latch, ``latch`` is the sticky-until-drain
+    #: detector, ``reduce_aware`` keys the latch on map-side pressure only
+    OVERLOAD_POLICIES = ("none", "latch", "reduce_aware")
+
     def __init__(self, spec: ClusterSpec, reconfig: Optional[Reconfigurator] = None,
-                 estimator: Optional[OnlineEstimator] = None):
+                 estimator: Optional[OnlineEstimator] = None, *,
+                 park_depth: int = 2, parking: bool = True,
+                 overload: str = "latch"):
         super().__init__(spec)
+        if overload not in self.OVERLOAD_POLICIES:
+            raise ValueError(f"unknown overload policy {overload!r}; "
+                             f"one of {self.OVERLOAD_POLICIES}")
         self.reconfig = reconfig or Reconfigurator(spec)
         self.estimator = estimator or OnlineEstimator()
         self.adaptive = self.reconfig.adaptive
+        self.overload_policy = overload
+        # park-admission switch: False = the edf_nopark ablation — every
+        # non-local candidate launches remotely at once, and the simulator
+        # skips the reconfigurator integration entirely (static capacity)
+        self.parking = parking
+        if not parking:
+            self.uses_reconfig = False      # instance attr shadows the class
         self.parked: Set[TaskId] = set()
         self._parked_maps_per_job: Dict[str, int] = {}
         # tasks whose reconfiguration wait expired once run remotely instead
         # of re-parking (bounds per-task wait at max_wait)
         self.no_park: Set[TaskId] = set()
         # max parked tasks per target machine's AQ
-        self.park_depth = 2
+        self.park_depth = park_depth
         self.max_slots = spec.num_nodes * spec.base_map_slots
         # adaptive overload detection: active jobs whose absolute deadline
         # has passed (completion-time goal lost), materialized lazily from a
@@ -282,22 +308,35 @@ class CompletionTimeScheduler(SchedulerBase):
         drained (hysteresis: the makespan damage of a surge happens in its
         drain tail, which sits below any instantaneous entry threshold).
         The ``overdue`` set (active jobs past their deadline) is kept in
-        sync here as an observable signal."""
+        sync here as an observable signal.
+
+        ``reduce_aware`` variant (the ``adaptive_ra`` policy): the latch is
+        a *map-side* pressure response — parking and EDF slot allocation
+        only shape the map phase — so the crowd bar counts **map-open**
+        jobs rather than all active jobs (a fleet of long reduce tails is
+        not an overload), and the latch releases as soon as the map
+        backlog drains instead of waiting for the full cluster drain
+        (shuffle-heavy mixes hold reduce backlogs for most of the run,
+        which kept the plain latch stuck and parking suspended — the
+        shuffle_heavy/20x2 −3.7% regression)."""
         self._sync_overdue(now)
         a = self.adaptive
         pending = self.total_pending_maps
+        reduce_aware = self.overload_policy == "reduce_aware"
         if self.overload_mode:
-            # the latch stays until the cluster fully drains; select never
-            # runs while idle, so the actual release happens when the next
-            # job finds an empty cluster (see on_job_added)
-            if not self.active:
-                self.overload_mode = False    # defensive: same condition
+            # the plain latch stays until the cluster fully drains; select
+            # never runs while idle, so the actual release happens when the
+            # next job finds an empty cluster (see on_job_added).  The
+            # reduce-aware latch releases on map-backlog drain.
+            if not self.active or (reduce_aware and self.map_open_jobs == 0):
+                self.overload_mode = False
         elif self.active:
             # both conditions strictly: a backlogged cluster with few wide
             # jobs (the paper's closed mix) is EDF's home regime — only the
             # many-small-jobs crowd flips the economics
+            crowd = self.map_open_jobs if reduce_aware else len(self.active)
             if (pending >= a.overload_pending_factor * self.max_slots
-                    and len(self.active)
+                    and crowd
                     >= a.overload_active_factor * self.spec.num_machines):
                 self.overload_mode = True
         return self.overload_mode
@@ -327,7 +366,8 @@ class CompletionTimeScheduler(SchedulerBase):
                                and not self.parked))
                 and (free_reduce <= 0 or self.ready_pending_reduces == 0)):
             return []
-        if self.adaptive.enabled and self._overload_check(now):
+        if (self.adaptive.enabled and self.overload_policy != "none"
+                and self._overload_check(now)):
             # pressured epoch: EDF-ordered allocation starves late-deadline
             # jobs and serializes the drain — degenerate to the exact Fair
             # assignment (parking suspended) until the cluster fully drains
@@ -543,12 +583,22 @@ class CompletionTimeScheduler(SchedulerBase):
         # everything else prefers parking (Algorithm 1), falling through to
         # the remote-fill pass only when the AQ is saturated.
         deadline_critical = slack <= 3.0 * self.reconfig.max_wait
-        if task in self.no_park or deadline_critical or not allow_park:
+        if (not self.parking or task in self.no_park or deadline_critical
+                or not allow_park):
             return Launch(task, node, local=False)
         adaptive = self.reconfig.adaptive
+        # the crowd bar: under the reduce-aware overload policy only
+        # map-open jobs count — jobs riding out long reduce tails do not
+        # compete for map slots, so they must not suppress parking
+        # (measured on shuffle_heavy/20x2: the all-active crowd bar kept
+        # parking shut for the whole run, locality 50% -> 17%; letting the
+        # park-outcome EWMA override the crowd instead was measured worse —
+        # reservation-effect "wins" still cost throughput under saturation)
+        crowd = (self.map_open_jobs if self.overload_policy == "reduce_aware"
+                 else len(self.active))
         if adaptive.enabled and (
                 self.overload_mode
-                or len(self.active) >= adaptive.park_active_factor
+                or crowd >= adaptive.park_active_factor
                 * self.spec.num_machines):
             # Overload latch or a crowd of active jobs: per-job shares sit
             # far below job widths, every parked map lands on its job's

@@ -4,10 +4,17 @@ Subcommands::
 
     generate   synthesize a trace (preset or custom knobs) to a JSONL file
     import     convert a SWIM/Facebook-format cluster log to repro-trace/v1
-    run        sweep a (trace x cluster x scheduler x seeds) grid, cached
-    compare    run two schedulers on the same grid, paired-bootstrap stats
+    run        sweep a (trace x cluster x policy x seeds) grid, cached
+    compare    run two policies on the same grid, paired-bootstrap stats
     regimes    fleet-scale preset x cluster-shape atlas (regime report)
     paper      reproduce the paper's §5 evaluation and check its claims
+    policies   list the registered scheduler policies (--smoke: run each
+               on a tiny cluster and flag stranded work)
+
+Scheduler arguments accept either a registered policy name (``proposed``,
+``adaptive``, ``adaptive_ra``, ``delay``, ``fair``, ``fifo``, ...) or an
+inline policy JSON object, e.g. ``'{"name": "delay", "params":
+{"locality_delay": 4}}'`` — see ``repro.core.policies``.
 
 Examples::
 
@@ -30,6 +37,8 @@ import sys
 from pathlib import Path
 from typing import List, Tuple
 
+from repro.core.policies import (PolicyError, PolicySpec,
+                                 registered_policies, smoke_test_policies)
 from repro.core.types import ClusterSpec
 from repro.experiments import regimes as regimes_mod
 from repro.experiments.paperfig import (FULL_SEEDS, QUICK_SEEDS, run_paper)
@@ -56,6 +65,14 @@ def _parse_seeds(tokens: List[str]) -> Tuple[int, ...]:
     if not out:
         raise argparse.ArgumentTypeError("no seeds given")
     return tuple(dict.fromkeys(out))    # dedup, keep order
+
+
+def _parse_policy(token: str) -> PolicySpec:
+    """A scheduler CLI token: registered name or inline policy JSON."""
+    try:
+        return PolicySpec.parse(token)
+    except PolicyError as e:
+        raise SystemExit(f"bad policy {token!r}: {e}")
 
 
 def _cluster_from_args(args) -> ClusterSpec:
@@ -163,8 +180,13 @@ def cmd_regimes(args) -> int:
         if f not in regimes_mod.FABRICS:
             raise SystemExit(f"unknown fabric {f!r}; available: "
                              f"{', '.join(regimes_mod.FABRICS)}")
+    replications = (tuple(args.replications)
+                    if args.replications is not None else (
+                        regimes_mod.QUICK_REPLICATIONS if args.quick
+                        else regimes_mod.FULL_REPLICATIONS))
     report = regimes_mod.run_regimes(
         presets, shapes, seeds, args.cache, fabrics=fabrics,
+        replications=replications,
         workers=args.workers,
         progress=print if args.verbose else None)
     out = report.save_json(args.out)
@@ -211,13 +233,18 @@ def _print_records(report) -> None:
 
 
 def cmd_run(args) -> int:
-    spec = ExperimentSpec(
-        name=args.name,
-        traces=(_trace_ref_from_args(args),),
-        clusters=(_cluster_from_args(args),),
-        schedulers=tuple(args.schedulers),
-        seeds=_parse_seeds(args.seeds),
-    )
+    policies = [_parse_policy(tok) for tok in args.schedulers]
+    policies += [_parse_policy(tok) for tok in (args.policy or [])]
+    try:
+        spec = ExperimentSpec(
+            name=args.name,
+            traces=(_trace_ref_from_args(args),),
+            clusters=(_cluster_from_args(args),),
+            schedulers=tuple(policies),
+            seeds=_parse_seeds(args.seeds),
+        )
+    except ValueError as e:               # duplicate policies etc.
+        raise SystemExit(f"bad sweep spec: {e}")
     report = run_experiment(spec, args.cache, workers=args.workers,
                             progress=print if args.verbose else None)
     _print_records(report)
@@ -225,28 +252,55 @@ def cmd_run(args) -> int:
 
 
 def cmd_compare(args) -> int:
-    spec = ExperimentSpec(
-        name=args.name,
-        traces=(_trace_ref_from_args(args),),
-        clusters=(_cluster_from_args(args),),
-        schedulers=(args.a, args.b),
-        seeds=_parse_seeds(args.seeds),
-    )
+    pol_a, pol_b = _parse_policy(args.a), _parse_policy(args.b)
+    try:
+        spec = ExperimentSpec(
+            name=args.name,
+            traces=(_trace_ref_from_args(args),),
+            clusters=(_cluster_from_args(args),),
+            schedulers=(pol_a, pol_b),
+            seeds=_parse_seeds(args.seeds),
+        )
+    except ValueError as e:               # e.g. --a and --b the same policy
+        raise SystemExit(f"bad sweep spec: {e}")
     report = run_experiment(spec, args.cache, workers=args.workers,
                             progress=print if args.verbose else None)
     by_sched = report.by_scheduler()
-    ra, rb = by_sched[args.a], by_sched[args.b]
-    print(f"[{report.spec_name}] {args.b} vs {args.a} "
+    a, b = pol_a.label, pol_b.label
+    ra, rb = by_sched[a], by_sched[b]
+    print(f"[{report.spec_name}] {b} vs {a} "
           f"({report.simulated} simulated, {report.cached} cached)")
-    print("  " + compare_throughput(ra, rb).format(args.a, args.b))
+    print("  " + compare_throughput(ra, rb).format(a, b))
     dl = compare_deadlines(ra, rb)
-    print(f"  deadlines met/run: {args.a} {dl['mean_a']:.1f} -> "
-          f"{args.b} {dl['mean_b']:.1f}")
+    print(f"  deadlines met/run: {a} {dl['mean_a']:.1f} -> "
+          f"{b} {dl['mean_b']:.1f}")
     print("  per-workload completion-time gain:")
     for w, cmp in compare_completion_by_workload(ra, rb).items():
         print(f"    {w:16s} {cmp.mean_gain_pct:+6.1f}% "
               f"[{cmp.ci_lo_pct:+6.1f}%, {cmp.ci_hi_pct:+6.1f}%] "
               f"win {cmp.win_rate:.0%}")
+    return 0
+
+
+def cmd_policies(args) -> int:
+    print(f"{'policy':12s} {'ordering':13s} {'park':9s} {'overload':13s} "
+          f"parameters")
+    for name, pol in registered_policies().items():
+        params = ", ".join(f"{k}={v}" for k, v in sorted(pol.defaults.items()))
+        c = pol.components
+        print(f"{name:12s} {c['ordering']:13s} {c['park']:9s} "
+              f"{c['overload']:13s} {params or '-'}")
+        if args.verbose:
+            print(f"             {pol.description}")
+    if args.smoke:
+        failures = smoke_test_policies()
+        if failures:
+            print("policy smoke FAILED:")
+            for f in failures:
+                print(f"  - {f}")
+            return 1
+        print(f"policy smoke passed: {len(registered_policies())} policies "
+              "ran clean (every job finished, no stranded tasks)")
     return 0
 
 
@@ -295,15 +349,21 @@ def main(argv=None) -> int:
 
     r = sub.add_parser("run", help="run a sweep grid (cached)")
     _add_grid_args(r)
-    r.add_argument("--schedulers", nargs="+", default=["proposed", "fair"])
+    r.add_argument("--schedulers", nargs="+", default=["proposed", "fair"],
+                   help="policy names or inline policy JSON objects")
+    r.add_argument("--policy", action="append", default=None,
+                   help='extra policy JSON, e.g. \'{"name": "delay", '
+                        '"params": {"locality_delay": 4}}\' (repeatable)')
     r.add_argument("--name", default="sweep")
     r.add_argument("--verbose", action="store_true")
     r.set_defaults(func=cmd_run)
 
-    c = sub.add_parser("compare", help="paired scheduler comparison")
+    c = sub.add_parser("compare", help="paired policy comparison")
     _add_grid_args(c)
-    c.add_argument("--a", default="fair", help="baseline scheduler")
-    c.add_argument("--b", default="proposed", help="candidate scheduler")
+    c.add_argument("--a", default="fair",
+                   help="baseline policy (name or JSON)")
+    c.add_argument("--b", default="proposed",
+                   help="candidate policy (name or JSON)")
     c.add_argument("--name", default="compare")
     c.add_argument("--verbose", action="store_true")
     c.set_defaults(func=cmd_compare)
@@ -326,6 +386,10 @@ def main(argv=None) -> int:
                     help="extra remote-penalty fabrics swept on the first "
                          "shape: " + ", ".join(regimes_mod.FULL_FABRICS)
                          + f" (full default: {regimes_mod.FULL_FABRICS})")
+    rg.add_argument("--replications", nargs="*", type=int, default=None,
+                    help="extra HDFS replication factors swept on the first "
+                         f"shape (full default: "
+                         f"{regimes_mod.FULL_REPLICATIONS})")
     rg.add_argument("--cache", type=Path, default=DEFAULT_CACHE)
     rg.add_argument("--workers", type=int, default=0)
     rg.add_argument("--out", type=Path, default=Path("regimes.json"),
@@ -336,6 +400,16 @@ def main(argv=None) -> int:
                          "(e.g. EXPERIMENTS.md)")
     rg.add_argument("--verbose", action="store_true")
     rg.set_defaults(func=cmd_regimes)
+
+    pl = sub.add_parser("policies",
+                        help="list registered scheduler policies "
+                             "(repro.core.policies)")
+    pl.add_argument("--smoke", action="store_true",
+                    help="instantiate every policy on a 2-machine scenario "
+                         "and fail on stranded work")
+    pl.add_argument("--verbose", action="store_true",
+                    help="include policy descriptions")
+    pl.set_defaults(func=cmd_policies)
 
     p = sub.add_parser("paper", help="reproduce the paper's §5 evaluation")
     p.add_argument("--quick", action="store_true",

@@ -46,7 +46,8 @@ class RunRecord:
     trace_name: str
     trace_seed: int
     cluster: Dict[str, object]           # ClusterSpec.to_dict()
-    scheduler: str
+    scheduler: str                       # PolicySpec.label (bare preset name
+                                         # when the spec has no overrides)
     seed: int
     makespan: float
     throughput_jph: float
@@ -59,16 +60,30 @@ class RunRecord:
     wall_time_s: float
     reconfig_stats: Dict[str, float] = field(default_factory=dict)
     jobs: List[JobRecord] = field(default_factory=list)
+    # canonical PolicySpec.to_dict() of the policy that produced the run;
+    # None on records written before the policy API existed (their
+    # ``scheduler`` string is the preset name, which parses to the spec)
+    policy: Optional[Dict[str, object]] = None
     version: int = RECORD_VERSION
 
     # -- identity -----------------------------------------------------------
     def pair_key(self):
-        """Records with equal pair keys differ only in scheduler — the unit
+        """Records with equal pair keys differ only in policy — the unit
         paired statistics match on.  The cluster dict is canonical-JSON
         encoded (the cache's ``_dumps``): it can hold nested config dicts
-        (``adaptive``), which a tuple-of-items would leave unhashable."""
+        (``adaptive``), which a tuple-of-items would leave unhashable.
+        The policy stays *out* of the key on purpose: ``scheduler`` (the
+        spec's label) is the column axis the pairing compares across."""
         return (self.trace_name, self.trace_seed, _dumps(self.cluster),
                 self.seed)
+
+    def policy_spec(self):
+        """The ``PolicySpec`` this record was produced under (parsed from
+        the stored canonical dict, falling back to the label string for
+        pre-policy records)."""
+        from repro.core.policies import PolicySpec
+        return PolicySpec.parse(self.policy if self.policy is not None
+                                else self.scheduler)
 
     # -- aggregation --------------------------------------------------------
     def mean_completion_by_workload(self) -> Dict[str, float]:
@@ -104,7 +119,9 @@ class RunRecord:
 
 def run_record_from_result(result: SimResult, *, trace: Trace,
                            cluster_dict: Dict[str, object], scheduler: str,
-                           seed: int, wall_time_s: float) -> RunRecord:
+                           seed: int, wall_time_s: float,
+                           policy: Optional[Dict[str, object]] = None
+                           ) -> RunRecord:
     """Flatten a ``SimResult`` into the warehouse record."""
     by_id = {tj.job_id: tj for tj in trace.jobs}
     jobs: List[JobRecord] = []
@@ -143,4 +160,5 @@ def run_record_from_result(result: SimResult, *, trace: Trace,
         wall_time_s=wall_time_s,
         reconfig_stats=dict(result.reconfig_stats),
         jobs=jobs,
+        policy=policy,
     )

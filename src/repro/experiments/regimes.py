@@ -1,12 +1,17 @@
 """Regime atlas: where does the reconfiguration mechanism actually win?
 
 The paper's headline (~12% throughput over Fair) is one point: one 20-machine
-cluster, one job mix.  This module sweeps the proposed scheduler against the
-Fair and FIFO baselines over the synthetic workload regimes (heavy-tailed
-sizes, diurnal arrivals, flash-crowd bursts, shuffle-heavy mixes) crossed
-with cluster shapes from the paper's 20x2 up to fleet scale, with ≥8 paired
-seeds per cell, and emits a machine-readable *regime report*: per-regime
-throughput-gain CIs, win rates, and locality/deadline deltas.
+cluster, one job mix.  This module sweeps the atlas policy columns —
+``proposed``, ``adaptive``, ``adaptive_ra`` (reduce-aware overload latch)
+and the ``delay``-scheduling baseline against ``fair`` and ``fifo``, all
+registry presets (see ``repro.core.policies``) — over the synthetic
+workload regimes (heavy-tailed sizes, diurnal arrivals, flash-crowd bursts,
+shuffle-heavy mixes, the saturated closed mix) crossed with cluster shapes
+from the paper's 20x2 up to fleet scale, with ≥8 paired seeds per cell,
+and emits a machine-readable *regime report*: per-regime throughput-gain
+CIs, win rates, and locality/deadline deltas.  Extra axes re-run every
+preset on the first shape: network fabrics (``FABRICS``) and HDFS
+replication (``replications``).
 
 Job counts scale with the fleet (num_jobs × machines/20) so a 100-machine
 cell faces proportional load, and every (trace seed, placement, jitter) draw
@@ -36,12 +41,16 @@ from repro.simcluster.largescale import FLEET_SHAPES, fleet_shape
 from repro.simcluster.traces import PRESETS
 
 REGIME_PRESETS: Tuple[str, ...] = ("heavy_tail", "diurnal", "bursty",
-                                   "shuffle_heavy")
+                                   "shuffle_heavy", "saturated")
 FULL_SHAPES: Tuple[str, ...] = ("20x2", "50x2", "100x2")
 QUICK_SHAPES: Tuple[str, ...] = ("20x2", "50x2")
 FULL_SEEDS: Tuple[int, ...] = tuple(range(8))
 QUICK_SEEDS: Tuple[int, ...] = (0, 1)
-SCHEDULERS: Tuple[str, ...] = ("proposed", "adaptive", "fair", "fifo")
+# atlas policy columns (all default-spec registry presets, so the cell
+# descriptors stay plain strings and pre-policy cache cells keep hitting):
+# adaptive_ra = the reduce-aware overload latch, delay = delay scheduling
+SCHEDULERS: Tuple[str, ...] = ("proposed", "adaptive", "adaptive_ra",
+                               "delay", "fair", "fifo")
 # remote-penalty calibration of the network fabric: at 1.0 a non-local map
 # pays the full 2012-era shared-1GbE remote-read penalty; faster fabrics
 # scale it down (~linear in link speed) — the axis answers "at what fabric
@@ -50,7 +59,13 @@ FABRICS: Dict[str, float] = {"1GbE": 1.0, "10GbE": 0.25, "40GbE": 0.0625}
 BASE_FABRIC = "1GbE"
 FULL_FABRICS: Tuple[str, ...] = ("10GbE", "40GbE")   # extra cells, 20x2 only
 QUICK_FABRICS: Tuple[str, ...] = ()
-REPORT_VERSION = 2
+# HDFS replication axis: the calibrated paper setting is replication 1
+# (per-VM virtual disks); replication 3 is the HDFS default — three times
+# the locality opportunities, so parking should matter *less*
+BASE_REPLICATION = 1
+FULL_REPLICATIONS: Tuple[int, ...] = (3,)            # extra cells, 20x2 only
+QUICK_REPLICATIONS: Tuple[int, ...] = ()
+REPORT_VERSION = 3
 
 
 def scaled_jobs(preset: str, machines: int) -> int:
@@ -61,21 +76,23 @@ def scaled_jobs(preset: str, machines: int) -> int:
 
 def regime_spec(preset: str, shape: str,
                 seeds: Sequence[int] = FULL_SEEDS,
-                fabric: str = BASE_FABRIC) -> ExperimentSpec:
-    """One atlas cell as a sweep spec: scaled preset trace x shape x all
-    four schedulers, trace seed coupled to the sim seed (every replication
-    re-rolls arrivals and placements for *all* schedulers alike).
-    ``fabric`` calibrates the remote-read penalty via
-    ``ClusterSpec.remote_penalty_scale``."""
+                fabric: str = BASE_FABRIC,
+                replication: int = BASE_REPLICATION) -> ExperimentSpec:
+    """One atlas cell as a sweep spec: scaled preset trace x shape x every
+    atlas policy column, trace seed coupled to the sim seed (every
+    replication re-rolls arrivals and placements for *all* schedulers
+    alike).  ``fabric`` calibrates the remote-read penalty via
+    ``ClusterSpec.remote_penalty_scale``; ``replication`` sets the HDFS
+    replica count."""
     machines, _ = FLEET_SHAPES[shape]
     config = dataclasses.replace(PRESETS[preset],
                                  num_jobs=scaled_jobs(preset, machines))
-    cluster = fleet_shape(shape)
+    cluster = fleet_shape(shape, replication=replication)
     if fabric != BASE_FABRIC:
         cluster = dataclasses.replace(cluster,
                                       remote_penalty_scale=FABRICS[fabric])
     return ExperimentSpec(
-        name=f"regime-{preset}-{shape}-{fabric}",
+        name=f"regime-{preset}-{shape}-{fabric}-r{replication}",
         traces=(TraceRef(config=config),),
         clusters=(cluster,),
         schedulers=SCHEDULERS,
@@ -94,8 +111,8 @@ def _verdict_of(cmp: PairedComparison) -> str:
 
 @dataclass
 class RegimeCell:
-    """Verdict for one (workload regime, cluster shape, fabric) point of
-    the atlas."""
+    """Verdict for one (workload regime, cluster shape, fabric, replication)
+    point of the atlas."""
 
     preset: str
     shape: str
@@ -107,10 +124,14 @@ class RegimeCell:
     vs_fifo: PairedComparison            # proposed-vs-fifo throughput
     adaptive_vs_fair: PairedComparison   # adaptive-vs-fair throughput
     adaptive_vs_proposed: PairedComparison
+    ra_vs_fair: PairedComparison         # adaptive_ra (reduce-aware latch)
+    ra_vs_adaptive: PairedComparison     # ... and its gain over plain latch
+    delay_vs_fair: PairedComparison      # delay-scheduling baseline
     locality: Dict[str, float]           # mean locality rate per scheduler
     deadline_frac: Dict[str, float]      # mean deadlines-met / jobs per run
     mean_makespan: Dict[str, float]
     fabric: str = BASE_FABRIC
+    replication: int = BASE_REPLICATION
 
     def verdict(self) -> str:
         """Proposed-vs-fair verdict (the legacy fixed-policy column)."""
@@ -119,6 +140,14 @@ class RegimeCell:
     def adaptive_verdict(self) -> str:
         """Adaptive-vs-fair verdict (the pressure-adaptive column)."""
         return _verdict_of(self.adaptive_vs_fair)
+
+    def ra_verdict(self) -> str:
+        """adaptive_ra-vs-fair verdict (reduce-aware overload latch)."""
+        return _verdict_of(self.ra_vs_fair)
+
+    def delay_verdict(self) -> str:
+        """delay-vs-fair verdict (delay-scheduling baseline)."""
+        return _verdict_of(self.delay_vs_fair)
 
     def locality_delta_pp(self, scheduler: str = "proposed") -> float:
         """Locality-rate gain of ``scheduler`` over fair, percentage pts."""
@@ -134,22 +163,31 @@ class RegimeCell:
             "preset": self.preset,
             "shape": self.shape,
             "fabric": self.fabric,
+            "replication": self.replication,
             "machines": self.machines,
             "vms": self.vms,
             "num_jobs": self.num_jobs,
             "seeds": list(self.seeds),
             "verdict": self.verdict(),
             "adaptive_verdict": self.adaptive_verdict(),
+            "ra_verdict": self.ra_verdict(),
+            "delay_verdict": self.delay_verdict(),
             "throughput_vs_fair": self.vs_fair.to_dict(),
             "throughput_vs_fifo": self.vs_fifo.to_dict(),
             "adaptive_vs_fair": self.adaptive_vs_fair.to_dict(),
             "adaptive_vs_proposed": self.adaptive_vs_proposed.to_dict(),
+            "adaptive_ra_vs_fair": self.ra_vs_fair.to_dict(),
+            "adaptive_ra_vs_adaptive": self.ra_vs_adaptive.to_dict(),
+            "delay_vs_fair": self.delay_vs_fair.to_dict(),
             "locality": self.locality,
             "locality_delta_pp": self.locality_delta_pp(),
             "adaptive_locality_delta_pp": self.locality_delta_pp("adaptive"),
+            "ra_locality_delta_pp": self.locality_delta_pp("adaptive_ra"),
+            "delay_locality_delta_pp": self.locality_delta_pp("delay"),
             "deadline_frac": self.deadline_frac,
             "deadline_delta_pp": self.deadline_delta_pp(),
             "adaptive_deadline_delta_pp": self.deadline_delta_pp("adaptive"),
+            "ra_deadline_delta_pp": self.deadline_delta_pp("adaptive_ra"),
             "mean_makespan": self.mean_makespan,
         }
 
@@ -163,14 +201,17 @@ class RegimeReport:
     simulated: int
     cached: int
     fabrics: Tuple[str, ...] = (BASE_FABRIC,)
+    replications: Tuple[int, ...] = (BASE_REPLICATION,)
     version: int = REPORT_VERSION
 
     def cell(self, preset: str, shape: str,
-             fabric: str = BASE_FABRIC) -> RegimeCell:
+             fabric: str = BASE_FABRIC,
+             replication: int = BASE_REPLICATION) -> RegimeCell:
         for c in self.cells:
-            if (c.preset, c.shape, c.fabric) == (preset, shape, fabric):
+            if (c.preset, c.shape, c.fabric, c.replication) \
+                    == (preset, shape, fabric, replication):
                 return c
-        raise KeyError((preset, shape, fabric))
+        raise KeyError((preset, shape, fabric, replication))
 
     def to_dict(self) -> Dict[str, object]:
         return {
@@ -179,6 +220,7 @@ class RegimeReport:
             "shapes": list(self.shapes),
             "seeds": list(self.seeds),
             "fabrics": list(self.fabrics),
+            "replications": list(self.replications),
             "schedulers": list(SCHEDULERS),
             "simulated": self.simulated,
             "cached": self.cached,
@@ -194,46 +236,61 @@ class RegimeReport:
 
     # -- human-readable views -----------------------------------------------
     def format(self) -> str:
-        lines = [f"== regime atlas: proposed/adaptive vs fair (+fifo) "
-                 f"({len(self.seeds)} paired seeds/cell; "
+        lines = [f"== regime atlas: proposed/adaptive/adaptive_ra/delay vs "
+                 f"fair (+fifo) ({len(self.seeds)} paired seeds/cell; "
                  f"{self.simulated} simulated, {self.cached} cached) =="]
         for c in self.cells:
-            g, a = c.vs_fair, c.adaptive_vs_fair
+            g, a, r = c.vs_fair, c.adaptive_vs_fair, c.ra_vs_fair
             lines.append(
                 f"  {c.preset:13s} {c.shape:6s} {c.fabric:5s} "
-                f"({c.num_jobs:3d} jobs)  "
+                f"r{c.replication} ({c.num_jobs:3d} jobs)  "
                 f"prop {g.mean_gain_pct:+6.1f}% "
                 f"[{g.ci_lo_pct:+6.1f}%, {g.ci_hi_pct:+6.1f}%] "
                 f"-> {c.verdict():4s}  "
                 f"adapt {a.mean_gain_pct:+6.1f}% "
                 f"[{a.ci_lo_pct:+6.1f}%, {a.ci_hi_pct:+6.1f}%] "
                 f"-> {c.adaptive_verdict():4s}  "
+                f"ra {r.mean_gain_pct:+6.1f}% -> {c.ra_verdict():4s}  "
+                f"delay {c.delay_vs_fair.mean_gain_pct:+6.1f}% "
+                f"-> {c.delay_verdict():4s}  "
                 f"Δlocal {c.locality_delta_pp():+5.1f}pp  "
                 f"Δddl {c.deadline_delta_pp():+5.1f}pp")
         return "\n".join(lines)
 
     def to_markdown(self) -> str:
         head = [
-            "| regime | cluster | fabric | jobs | proposed vs fair (95% CI) "
-            "| verdict | adaptive vs fair (95% CI) | verdict | adaptive vs "
-            "proposed | Δ locality (prop/adapt) | Δ deadlines (prop/adapt) |",
-            "| --- | --- | --- | ---: | --- | --- | --- | --- | --- | --- "
-            "| --- |",
+            "| regime | cluster | fabric | repl | jobs "
+            "| proposed vs fair (95% CI) | verdict "
+            "| adaptive vs fair (95% CI) | verdict "
+            "| adaptive_ra vs fair (95% CI) | verdict "
+            "| delay vs fair | verdict | adaptive vs proposed "
+            "| Δ locality (prop/adapt/ra/delay) "
+            "| Δ deadlines (prop/adapt/ra) |",
+            "| --- | --- | --- | ---: | ---: | --- | --- | --- | --- | --- "
+            "| --- | --- | --- | --- | --- | --- |",
         ]
         rows = []
         for c in self.cells:
-            f, a, ap = c.vs_fair, c.adaptive_vs_fair, c.adaptive_vs_proposed
+            f, a = c.vs_fair, c.adaptive_vs_fair
+            r, d, ap = c.ra_vs_fair, c.delay_vs_fair, c.adaptive_vs_proposed
             rows.append(
-                f"| {c.preset} | {c.shape} | {c.fabric} | {c.num_jobs} "
+                f"| {c.preset} | {c.shape} | {c.fabric} | {c.replication} "
+                f"| {c.num_jobs} "
                 f"| {f.mean_gain_pct:+.1f}% [{f.ci_lo_pct:+.1f}%, "
                 f"{f.ci_hi_pct:+.1f}%] | {c.verdict()} "
                 f"| {a.mean_gain_pct:+.1f}% [{a.ci_lo_pct:+.1f}%, "
                 f"{a.ci_hi_pct:+.1f}%] | {c.adaptive_verdict()} "
+                f"| {r.mean_gain_pct:+.1f}% [{r.ci_lo_pct:+.1f}%, "
+                f"{r.ci_hi_pct:+.1f}%] | {c.ra_verdict()} "
+                f"| {d.mean_gain_pct:+.1f}% | {c.delay_verdict()} "
                 f"| {ap.mean_gain_pct:+.1f}% "
                 f"| {c.locality_delta_pp():+.1f} / "
-                f"{c.locality_delta_pp('adaptive'):+.1f} pp "
+                f"{c.locality_delta_pp('adaptive'):+.1f} / "
+                f"{c.locality_delta_pp('adaptive_ra'):+.1f} / "
+                f"{c.locality_delta_pp('delay'):+.1f} pp "
                 f"| {c.deadline_delta_pp():+.1f} / "
-                f"{c.deadline_delta_pp('adaptive'):+.1f} pp |")
+                f"{c.deadline_delta_pp('adaptive'):+.1f} / "
+                f"{c.deadline_delta_pp('adaptive_ra'):+.1f} pp |")
         return "\n".join(head + rows)
 
 
@@ -246,25 +303,34 @@ def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
                 seeds: Sequence[int] = FULL_SEEDS,
                 cache_dir: Union[str, Path] = ".exp-cache",
                 *, fabrics: Sequence[str] = (),
+                replications: Sequence[int] = (),
                 workers: int = 0, n_boot: int = 2000,
                 progress=None) -> RegimeReport:
     """Run (or re-serve from cache) the full atlas grid and distill the
-    per-regime verdicts.  ``fabrics`` adds a remote-penalty sweep: each
-    extra fabric re-runs every preset on the *first* shape (the paper's
-    20x2 unless overridden) with the scaled remote-read penalty."""
+    per-regime verdicts.  ``fabrics`` adds a remote-penalty sweep and
+    ``replications`` an HDFS-replica sweep: each extra fabric/replication
+    re-runs every preset on the *first* shape (the paper's 20x2 unless
+    overridden) with the scaled remote-read penalty / replica count."""
     for f in fabrics:
         if f not in FABRICS:
             raise ValueError(f"unknown fabric {f!r}; available: "
                              f"{', '.join(FABRICS)}")
+    for r in replications:
+        if not isinstance(r, int) or r < 1:
+            raise ValueError(f"replication must be a positive int, got {r!r}")
     cells: List[RegimeCell] = []
     simulated = cached = 0
-    points = [(preset, shape, BASE_FABRIC)
+    points = [(preset, shape, BASE_FABRIC, BASE_REPLICATION)
               for preset in presets for shape in shapes]
-    points += [(preset, shapes[0], fabric)
+    points += [(preset, shapes[0], fabric, BASE_REPLICATION)
                for fabric in fabrics for preset in presets
                if fabric != BASE_FABRIC]
-    for preset, shape, fabric in points:
-        spec = regime_spec(preset, shape, seeds, fabric=fabric)
+    points += [(preset, shapes[0], BASE_FABRIC, repl)
+               for repl in replications for preset in presets
+               if repl != BASE_REPLICATION]
+    for preset, shape, fabric, repl in points:
+        spec = regime_spec(preset, shape, seeds, fabric=fabric,
+                           replication=repl)
         report = run_experiment(spec, cache_dir, workers=workers,
                                 progress=progress)
         simulated += report.simulated
@@ -275,6 +341,7 @@ def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
             preset=preset,
             shape=shape,
             fabric=fabric,
+            replication=repl,
             machines=machines,
             vms=vms,
             num_jobs=scaled_jobs(preset, machines),
@@ -287,6 +354,12 @@ def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
                                                 n_boot=n_boot),
             adaptive_vs_proposed=compare_throughput(
                 by["proposed"], by["adaptive"], n_boot=n_boot),
+            ra_vs_fair=compare_throughput(by["fair"], by["adaptive_ra"],
+                                          n_boot=n_boot),
+            ra_vs_adaptive=compare_throughput(
+                by["adaptive"], by["adaptive_ra"], n_boot=n_boot),
+            delay_vs_fair=compare_throughput(by["fair"], by["delay"],
+                                             n_boot=n_boot),
             locality={s: _mean([r.locality_rate for r in rs])
                       for s, rs in by.items()},
             deadline_frac={
@@ -298,12 +371,17 @@ def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
         ))
         if progress:
             c = cells[-1]
-            progress(f"[{preset}/{shape}/{fabric}] proposed "
+            progress(f"[{preset}/{shape}/{fabric}/r{repl}] proposed "
                      f"{c.vs_fair.mean_gain_pct:+.1f}% -> {c.verdict()}, "
                      f"adaptive {c.adaptive_vs_fair.mean_gain_pct:+.1f}% "
-                     f"-> {c.adaptive_verdict()}")
+                     f"-> {c.adaptive_verdict()}, "
+                     f"ra {c.ra_vs_fair.mean_gain_pct:+.1f}% "
+                     f"-> {c.ra_verdict()}")
     return RegimeReport(presets=tuple(presets), shapes=tuple(shapes),
                         seeds=tuple(seeds), cells=cells,
                         simulated=simulated, cached=cached,
                         fabrics=(BASE_FABRIC,) + tuple(
-                            f for f in fabrics if f != BASE_FABRIC))
+                            f for f in fabrics if f != BASE_FABRIC),
+                        replications=(BASE_REPLICATION,) + tuple(
+                            r for r in replications
+                            if r != BASE_REPLICATION))

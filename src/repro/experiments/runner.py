@@ -28,15 +28,17 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
+from repro.core.policies import PolicyError, PolicySpec
 from repro.core.types import ClusterSpec
 from repro.experiments.metrics import RunRecord, run_record_from_result
-from repro.simcluster.largescale import build_scheduler
 from repro.simcluster.sim import ClusterSim
 from repro.simcluster.traces import (PRESETS, Trace, TraceConfig, _dumps,
                                      generate_trace, paper_trace,
                                      trace_from_rows)
 
 CACHE_VERSION = 1
+# the canonical preset names (kept for compatibility; the scheduler axis
+# accepts any registered PolicySpec — see repro.core.policies)
 SCHEDULERS = ("proposed", "adaptive", "fair", "fifo")
 
 
@@ -96,11 +98,16 @@ class TraceRef:
 
 @dataclass(frozen=True)
 class Cell:
-    """One grid point; fully picklable so pool workers can simulate it."""
+    """One grid point; fully picklable so pool workers can simulate it.
+
+    ``scheduler`` is a ``PolicySpec``.  Its cache descriptor collapses to
+    the bare policy name when the spec carries no parameter overrides —
+    byte-identical to the pre-policy string descriptors, so existing cache
+    cells keep hitting."""
 
     trace: TraceRef
     cluster: ClusterSpec
-    scheduler: str
+    scheduler: PolicySpec
     seed: int
     straggler_prob: float
     straggler_factor: float
@@ -112,7 +119,7 @@ class Cell:
             "version": CACHE_VERSION,
             "trace": self.trace.descriptor(),
             "cluster": self.cluster.to_dict(),
-            "scheduler": self.scheduler,
+            "scheduler": self.scheduler.cache_descriptor(),
             "sim": {
                 "straggler_prob": self.straggler_prob,
                 "straggler_factor": self.straggler_factor,
@@ -132,7 +139,9 @@ class ExperimentSpec:
     name: str
     traces: Tuple[TraceRef, ...]
     clusters: Tuple[ClusterSpec, ...]
-    schedulers: Tuple[str, ...] = ("proposed", "fair")
+    # policy values: PolicySpec instances, registered names, or policy dicts
+    # (normalized to PolicySpec on construction; unknown names raise)
+    schedulers: Tuple[Union[str, PolicySpec], ...] = ("proposed", "fair")
     seeds: Tuple[int, ...] = (0,)
     straggler_prob: float = 0.03
     straggler_factor: float = 3.0
@@ -140,10 +149,14 @@ class ExperimentSpec:
     speculation_threshold: float = 2.0
 
     def __post_init__(self) -> None:
-        for s in self.schedulers:
-            if s not in SCHEDULERS:
-                raise ValueError(f"unknown scheduler {s!r}; "
-                                 f"available: {', '.join(SCHEDULERS)}")
+        try:
+            specs = tuple(PolicySpec.parse(s) for s in self.schedulers)
+        except PolicyError as e:
+            raise ValueError(f"unknown scheduler: {e}") from e
+        object.__setattr__(self, "schedulers", specs)
+        labels = [s.label for s in specs]
+        if len(set(labels)) != len(labels):
+            raise ValueError(f"duplicate scheduler policies: {labels}")
         if not (self.traces and self.clusters and self.schedulers and self.seeds):
             raise ValueError("every grid axis needs at least one value")
 
@@ -184,7 +197,7 @@ def simulate_cell(cell: Cell) -> Dict[str, object]:
     trace = cell.trace.resolve(cell.seed)
     spec = cell.cluster
     jobs = trace.job_specs(spec)
-    sched = build_scheduler(cell.scheduler, spec)
+    sched = cell.scheduler.build(spec)
     sim = ClusterSim(spec, sched, seed=cell.seed,
                      straggler_prob=cell.straggler_prob,
                      straggler_factor=cell.straggler_factor,
@@ -195,7 +208,8 @@ def simulate_cell(cell: Cell) -> Dict[str, object]:
     wall = time.perf_counter() - t0
     record = run_record_from_result(
         result, trace=trace, cluster_dict=spec.to_dict(),
-        scheduler=cell.scheduler, seed=cell.seed, wall_time_s=wall)
+        scheduler=cell.scheduler.label, seed=cell.seed, wall_time_s=wall,
+        policy=cell.scheduler.to_dict())
     return record.to_dict()
 
 
@@ -248,7 +262,7 @@ def run_experiment(spec: ExperimentSpec,
             result_path.write_text(_dumps(rec_dict) + "\n")
             records.append(RunRecord.from_dict(rec_dict))
             if progress:
-                progress(f"  simulated {cell.scheduler} seed={cell.seed} "
+                progress(f"  simulated {cell.scheduler.label} seed={cell.seed} "
                          f"({rec_dict['events_processed']} events, "
                          f"{rec_dict['wall_time_s']:.2f}s)")
 

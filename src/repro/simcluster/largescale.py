@@ -138,49 +138,32 @@ def fleet_shape(name: str, replication: int = 1) -> ClusterSpec:
 
 
 def build_scheduler(kind: str, spec: ClusterSpec, *, legacy: bool = False):
-    """Scheduler factory over both engines (``legacy`` = frozen seed code).
+    """Deprecated string-keyed factory — the policy registry replaced it.
 
-    ``adaptive`` is the proposed scheduler with the pressure-adaptive
-    reconfiguration policy switched on (``ClusterSpec.adaptive``); it has no
-    legacy counterpart — the frozen seed engine predates the policy."""
-    if legacy:
-        from repro.simcluster import _legacy as L
-        if kind == "proposed":
-            return L.LegacyCompletionTimeScheduler(
-                spec, L.LegacyReconfigurator(spec, max_wait=30.0))
-        if kind == "fair":
-            return L.LegacyFairScheduler(spec)
-        if kind == "fifo":
-            return L.LegacyFIFOScheduler(spec)
-    else:
-        from repro.core.baselines import FairScheduler, FIFOScheduler
-        from repro.core.reconfigurator import Reconfigurator
-        from repro.core.scheduler import CompletionTimeScheduler
-        if kind == "proposed":
-            return CompletionTimeScheduler(spec,
-                                           Reconfigurator(spec, max_wait=30.0))
-        if kind == "adaptive":
-            import dataclasses
-            aspec = spec if spec.adaptive.enabled else dataclasses.replace(
-                spec, adaptive=dataclasses.replace(spec.adaptive, enabled=True))
-            sched = CompletionTimeScheduler(
-                aspec, Reconfigurator(aspec, max_wait=30.0))
-            sched.name = "adaptive"     # instance attr shadows the class name
-            return sched
-        if kind == "fair":
-            return FairScheduler(spec)
-        if kind == "fifo":
-            return FIFOScheduler(spec)
-    raise ValueError(f"unknown scheduler kind: {kind}")
+    Kept as a shim so old call sites keep working: ``kind`` is resolved
+    through ``repro.core.policies`` (``PolicyError`` subclasses ValueError,
+    so unknown names still raise ValueError).  New code should construct a
+    ``PolicySpec`` and call ``.build(spec)`` directly."""
+    import warnings
+
+    from repro.core.policies import build_policy
+    warnings.warn(
+        "build_scheduler(kind: str, ...) is deprecated; use "
+        "repro.core.policies.PolicySpec(name, params).build(cluster) "
+        "or SchedulerBase.from_policy(...)",
+        DeprecationWarning, stacklevel=2)
+    return build_policy(kind, spec, legacy=legacy)
 
 
-def run_scenario(name: str, *, scheduler: str = "proposed", seed: int = 0,
+def run_scenario(name: str, *, scheduler="proposed", seed: int = 0,
                  engine: str = "indexed", until: float = 10_000_000.0):
-    """Run one named scenario; returns the ``SimResult``."""
+    """Run one named scenario; returns the ``SimResult``.  ``scheduler`` is
+    any policy value ``PolicySpec.parse`` accepts (name, JSON, dict, spec)."""
+    from repro.core.policies import build_policy
     sc = SCENARIOS[name]
     spec = sc.cluster()
     jobs = sc.jobs(spec, seed=seed)
-    sched = build_scheduler(scheduler, spec, legacy=(engine == "legacy"))
+    sched = build_policy(scheduler, spec, legacy=(engine == "legacy"))
     if engine == "legacy":
         from repro.simcluster._legacy import LegacyClusterSim
         sim = LegacyClusterSim(spec, sched, seed=seed)

@@ -51,6 +51,39 @@ def test_partial_grid_runs_only_missing_cells(tmp_path):
     assert extra_sched.cached == 6
 
 
+def test_policy_specs_share_cache_with_string_schedulers(tmp_path):
+    """The legacy alias: a default PolicySpec hits the cells a bare string
+    scheduler wrote (and vice versa), while a parameter override is a new
+    cell.  Records carry the canonical policy dict and the spec's label."""
+    from repro.core.policies import PolicySpec
+    first = run_experiment(_small_spec(seeds=(0,), schedulers=("fair",)),
+                           tmp_path)
+    assert first.simulated == 1
+    as_spec = run_experiment(
+        _small_spec(seeds=(0,), schedulers=(PolicySpec("fair"),)), tmp_path)
+    assert as_spec.simulated == 0 and as_spec.cached == 1
+    (rec,) = as_spec.records
+    assert rec.scheduler == "fair"
+    assert rec.policy == {"name": "fair", "params": {}}
+    assert rec.policy_spec() == PolicySpec("fair")
+    tweaked = run_experiment(
+        _small_spec(seeds=(0,),
+                    schedulers=(PolicySpec("fair", {"locality_delay": 2}),)),
+        tmp_path)
+    assert tweaked.simulated == 1        # parameter override = new cell
+    (trec,) = tweaked.records
+    assert trec.scheduler == "fair[locality_delay=2]"
+    assert trec.policy == {"name": "fair", "params": {"locality_delay": 2}}
+
+
+def test_unknown_and_duplicate_policies_rejected():
+    with pytest.raises(ValueError, match="unknown"):
+        _small_spec(schedulers=("warp_speed",))
+    with pytest.raises(ValueError, match="duplicate"):
+        from repro.core.policies import PolicySpec
+        _small_spec(schedulers=("fair", PolicySpec("fair")))
+
+
 def test_cache_distinguishes_cluster_and_trace(tmp_path):
     run_experiment(_small_spec(), tmp_path)
     other_cluster = ExperimentSpec(

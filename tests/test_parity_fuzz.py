@@ -38,15 +38,9 @@ import random
 
 import pytest
 
-from repro.core.baselines import FairScheduler, FIFOScheduler
-from repro.core.reconfigurator import Reconfigurator
-from repro.core.scheduler import CompletionTimeScheduler
+from repro.core.policies import PolicyError, PolicySpec
 from repro.core.types import AdaptiveConfig, ClusterSpec
-from repro.simcluster._legacy import (LegacyClusterSim,
-                                      LegacyCompletionTimeScheduler,
-                                      LegacyFairScheduler,
-                                      LegacyFIFOScheduler,
-                                      LegacyReconfigurator)
+from repro.simcluster._legacy import LegacyClusterSim
 from repro.simcluster.sim import ClusterSim
 from repro.simcluster.workloads import WORKLOADS, default_deadline, make_job
 
@@ -128,27 +122,26 @@ def build_scenario(rng: random.Random):
     }
 
 
+def _policy_spec(sc) -> PolicySpec:
+    """The scenario's scheduler as a policy spec — the fuzz suite builds
+    both engines through the *policy registry* construction path, so the
+    parity contract re-pins specs end-to-end, not just direct kwargs."""
+    params = {}
+    if sc["scheduler"] in ("proposed", "adaptive"):
+        params = {"max_wait": sc["max_wait"], "park_depth": sc["park_depth"]}
+    return PolicySpec(sc["scheduler"], params)
+
+
 def _schedulers(sc):
     spec = sc["spec"]
-    if sc["scheduler"] == "proposed":
-        new = CompletionTimeScheduler(
-            spec, Reconfigurator(spec, max_wait=sc["max_wait"]))
-        new.park_depth = sc["park_depth"]
-        old = LegacyCompletionTimeScheduler(
-            spec, LegacyReconfigurator(spec, max_wait=sc["max_wait"]))
-        old.park_depth = sc["park_depth"]
-        return new, old
+    policy = _policy_spec(sc)
+    new = policy.build(spec)
     if sc["scheduler"] == "adaptive":
         # pressure-adaptive mode: new engine only (no legacy counterpart)
-        aspec = dataclasses.replace(
-            spec, adaptive=dataclasses.replace(spec.adaptive, enabled=True))
-        new = CompletionTimeScheduler(
-            aspec, Reconfigurator(aspec, max_wait=sc["max_wait"]))
-        new.park_depth = sc["park_depth"]
+        with pytest.raises(PolicyError):
+            policy.build(spec, legacy=True)
         return new, None
-    if sc["scheduler"] == "fair":
-        return FairScheduler(spec), LegacyFairScheduler(spec)
-    return FIFOScheduler(spec), LegacyFIFOScheduler(spec)
+    return new, policy.build(spec, legacy=True)
 
 
 def assert_scenario_parity(sc):

@@ -23,12 +23,20 @@ from repro.simcluster.traces import PRESETS
 
 
 def test_atlas_grid_covers_acceptance_floor():
-    """≥4 presets x ≥2 shapes x 4 schedulers x ≥8 paired seeds, plus the
-    remote-penalty fabric axis."""
-    assert len(REGIME_PRESETS) >= 4
+    """≥5 presets x ≥2 shapes x 6 policy columns x ≥8 paired seeds, plus
+    the remote-penalty fabric and HDFS replication axes."""
+    assert len(REGIME_PRESETS) >= 5
+    assert "saturated" in REGIME_PRESETS        # the §5 closed-mix bridge
     assert len(QUICK_SHAPES) >= 2 and len(FULL_SHAPES) >= 3
-    assert set(SCHEDULERS) == {"proposed", "adaptive", "fair", "fifo"}
-    from repro.experiments.regimes import FULL_SEEDS
+    assert set(SCHEDULERS) == {"proposed", "adaptive", "adaptive_ra",
+                               "delay", "fair", "fifo"}
+    # every atlas column is a default-spec registry preset: its cell
+    # descriptor stays the bare name (cache-compatible) and it builds
+    from repro.core.policies import PolicySpec
+    for s in SCHEDULERS:
+        assert PolicySpec(s).cache_descriptor() == s
+    from repro.experiments.regimes import (FULL_REPLICATIONS, FULL_SEEDS,
+                                           BASE_REPLICATION)
     assert len(FULL_SEEDS) >= 8
     assert set(QUICK_SHAPES) <= set(FULL_SHAPES)   # quick is a sub-grid
     assert set(QUICK_SEEDS) <= set(FULL_SEEDS)
@@ -37,6 +45,7 @@ def test_atlas_grid_covers_acceptance_floor():
     assert set(FULL_FABRICS) <= set(FABRICS)
     # fabric scales decrease with link speed
     assert FABRICS["1GbE"] > FABRICS["10GbE"] > FABRICS["40GbE"]
+    assert BASE_REPLICATION == 1 and 3 in FULL_REPLICATIONS
 
 
 def test_scaled_jobs_tracks_fleet_size():
@@ -55,36 +64,44 @@ def test_fleet_shape_lookup():
 
 def test_regime_spec_pairs_all_schedulers():
     spec = regime_spec("bursty", "20x2", seeds=(0, 1))
-    assert spec.schedulers == SCHEDULERS
-    assert spec.n_cells() == 1 * 1 * 4 * 2
+    assert tuple(s.label for s in spec.schedulers) == SCHEDULERS
+    assert spec.n_cells() == 1 * 1 * len(SCHEDULERS) * 2
     # trace seed coupled to sim seed: placements re-roll per replication
     ref = spec.traces[0]
     assert ref.seed is None
     assert ref.config.num_jobs == scaled_jobs("bursty", 20)
     # base fabric leaves the cluster untouched; others scale the penalty
     assert spec.clusters[0].remote_penalty_scale == 1.0
+    assert spec.clusters[0].replication == 1
     fab = regime_spec("bursty", "20x2", seeds=(0,), fabric="10GbE")
     assert fab.clusters[0].remote_penalty_scale == FABRICS["10GbE"]
+    r3 = regime_spec("bursty", "20x2", seeds=(0,), replication=3)
+    assert r3.clusters[0].replication == 3
 
 
 def test_run_regimes_report_and_cache(tmp_path):
+    n = len(SCHEDULERS)
     report = run_regimes(presets=("mix_small",), shapes=("20x2",),
                          seeds=(0, 1), cache_dir=tmp_path / "cache",
                          n_boot=200)
-    assert report.simulated == 8 and report.cached == 0
+    assert report.simulated == 2 * n and report.cached == 0
     (cell,) = report.cells
     assert cell.verdict() in ("win", "loss", "tie")
     assert cell.adaptive_verdict() in ("win", "loss", "tie")
+    assert cell.ra_verdict() in ("win", "loss", "tie")
+    assert cell.delay_verdict() in ("win", "loss", "tie")
     assert cell.fabric == BASE_FABRIC
+    assert cell.replication == 1
     assert cell.vs_fair.n_pairs == 2 and cell.vs_fifo.n_pairs == 2
     assert cell.adaptive_vs_fair.n_pairs == 2
+    assert cell.ra_vs_fair.n_pairs == 2 and cell.delay_vs_fair.n_pairs == 2
     assert set(cell.locality) == set(SCHEDULERS)
     assert all(0.0 <= v <= 1.0 for v in cell.deadline_frac.values())
     # rerun: pure cache hit
     again = run_regimes(presets=("mix_small",), shapes=("20x2",),
                         seeds=(0, 1), cache_dir=tmp_path / "cache",
                         n_boot=200)
-    assert again.simulated == 0 and again.cached == 8
+    assert again.simulated == 0 and again.cached == 2 * n
     assert again.cells[0].to_dict() == cell.to_dict()
     # machine-readable report round-trips through JSON
     out = report.save_json(tmp_path / "report.json")
@@ -93,23 +110,28 @@ def test_run_regimes_report_and_cache(tmp_path):
         <= loaded["cells"][0]["throughput_vs_fair"]["ci_hi_pct"]
     assert loaded["cells"][0]["verdict"] == cell.verdict()
     assert loaded["cells"][0]["adaptive_verdict"] == cell.adaptive_verdict()
+    assert loaded["cells"][0]["ra_verdict"] == cell.ra_verdict()
+    assert loaded["cells"][0]["delay_verdict"] == cell.delay_verdict()
     assert loaded["fabrics"] == ["1GbE"]
+    assert loaded["replications"] == [1]
     # renders
     assert "adapt" in report.format()
     md = report.to_markdown()
     assert md.startswith("| regime |") and "mix_small" in md
     assert "adaptive vs fair" in md
+    assert "adaptive_ra vs fair" in md and "delay vs fair" in md
 
 
 def test_fabric_axis_extends_grid_and_reuses_cache(tmp_path):
+    n = len(SCHEDULERS)
     base = run_regimes(presets=("mix_small",), shapes=("20x2",),
                        seeds=(0,), cache_dir=tmp_path / "cache", n_boot=100)
-    assert base.simulated == 4
+    assert base.simulated == n
     fab = run_regimes(presets=("mix_small",), shapes=("20x2",),
                       seeds=(0,), fabrics=("10GbE",),
                       cache_dir=tmp_path / "cache", n_boot=100)
     # base cells reused; only the 10GbE cell simulates
-    assert fab.simulated == 4 and fab.cached == 4
+    assert fab.simulated == n and fab.cached == n
     assert [c.fabric for c in fab.cells] == ["1GbE", "10GbE"]
     assert fab.fabrics == ("1GbE", "10GbE")
     assert fab.cell("mix_small", "20x2", "10GbE").fabric == "10GbE"
@@ -120,12 +142,34 @@ def test_fabric_axis_extends_grid_and_reuses_cache(tmp_path):
                     fabrics=("100GbE",), cache_dir=tmp_path / "cache")
 
 
+def test_replication_axis_extends_grid_and_reuses_cache(tmp_path):
+    n = len(SCHEDULERS)
+    base = run_regimes(presets=("mix_small",), shapes=("20x2",),
+                       seeds=(0,), cache_dir=tmp_path / "cache", n_boot=100)
+    assert base.simulated == n
+    r3 = run_regimes(presets=("mix_small",), shapes=("20x2",),
+                     seeds=(0,), replications=(3,),
+                     cache_dir=tmp_path / "cache", n_boot=100)
+    # base cells reused; only the replication-3 cell simulates
+    assert r3.simulated == n and r3.cached == n
+    assert [c.replication for c in r3.cells] == [1, 3]
+    assert r3.replications == (1, 3)
+    cell = r3.cell("mix_small", "20x2", replication=3)
+    assert cell.replication == 3 and cell.fabric == BASE_FABRIC
+    with pytest.raises(KeyError):
+        r3.cell("mix_small", "20x2", replication=2)
+    with pytest.raises(ValueError, match="replication"):
+        run_regimes(presets=("mix_small",), shapes=("20x2",), seeds=(0,),
+                    replications=(0,), cache_dir=tmp_path / "cache")
+
+
 # -- the flipped loss cell must not silently regress -------------------------
 
 @pytest.fixture(scope="module")
 def quick_cells(tmp_path_factory):
-    """The --quick-compatible diurnal/20x2 cell + the paper closed mix,
-    simulated once for both regression pins below."""
+    """The --quick-compatible diurnal/20x2 cell, the paper closed mix, and
+    the shuffle_heavy/20x2 cell, simulated once for the regression pins
+    below."""
     cache = tmp_path_factory.mktemp("atlas-cache")
     diurnal = ExperimentSpec(
         name="pin-diurnal",
@@ -141,15 +185,23 @@ def quick_cells(tmp_path_factory):
         schedulers=("proposed", "adaptive", "fair"),
         seeds=QUICK_SEEDS,
     )
+    shuffle = ExperimentSpec(
+        name="pin-shuffle",
+        traces=(regime_spec("shuffle_heavy", "20x2").traces[0],),
+        clusters=(fleet_shape("20x2"),),
+        schedulers=("adaptive", "adaptive_ra", "fair"),
+        seeds=QUICK_SEEDS,
+    )
     return (run_experiment(diurnal, cache).by_scheduler(),
-            run_experiment(paper, cache).by_scheduler())
+            run_experiment(paper, cache).by_scheduler(),
+            run_experiment(shuffle, cache).by_scheduler())
 
 
 def test_adaptive_flips_diurnal_loss_cell(quick_cells):
     """On the diurnal/20x2 loss cell the adaptive policy must beat the
     fixed policy outright and sit within noise of Fair (the committed
     8-seed atlas shows the full flip; this pin is the fast canary)."""
-    by, _ = quick_cells
+    by, _, _ = quick_cells
     vs_proposed = compare_throughput(by["proposed"], by["adaptive"])
     vs_fair = compare_throughput(by["fair"], by["adaptive"])
     assert vs_proposed.mean_gain_pct > 5.0     # measured ~+12.6%
@@ -160,8 +212,27 @@ def test_adaptive_preserves_closed_mix_win(quick_cells):
     """On the paper's closed mix the adaptive policy must keep the
     throughput win over Fair (the latch and gates must never fire there)
     and stay within noise of the fixed policy."""
-    _, by = quick_cells
+    _, by, _ = quick_cells
     vs_fair = compare_throughput(by["fair"], by["adaptive"])
     vs_proposed = compare_throughput(by["proposed"], by["adaptive"])
     assert vs_fair.mean_gain_pct > 10.0        # measured ~+22.1%
     assert vs_proposed.mean_gain_pct > -30.0   # measured ~-15%, noisy cell
+
+
+def test_reduce_aware_latch_fixes_shuffle_heavy_cell(quick_cells):
+    """The adaptive_ra policy (reduce-aware overload latch + map-open crowd
+    bar) must recover the shuffle_heavy/20x2 regression: it beats the plain
+    adaptive latch outright on the quick sub-grid and stays within noise of
+    Fair (the committed 8-seed atlas shows loss -> tie: adaptive -3.7%
+    [-5.6, -2.0] vs adaptive_ra -2.0% [-5.0, +1.1])."""
+    _, _, by = quick_cells
+    vs_adaptive = compare_throughput(by["adaptive"], by["adaptive_ra"])
+    vs_fair = compare_throughput(by["fair"], by["adaptive_ra"])
+    assert vs_adaptive.mean_gain_pct > 0.5     # measured ~+3.2%
+    assert vs_fair.mean_gain_pct > -5.0        # measured ~-2.4% (adaptive
+    #                                            sits at ~-5.5% here)
+    # the reduce-aware variant must also recover locality, not just trade
+    # it away: strictly more data-local launches than the plain latch
+    loc_ra = sum(r.locality_rate for r in by["adaptive_ra"])
+    loc_ad = sum(r.locality_rate for r in by["adaptive"])
+    assert loc_ra >= loc_ad
