@@ -9,10 +9,10 @@ Modes:
 
 * default — the full regression benchmark: paper cluster (both engines) +
   the sustained 100-machine / 120-job scenario (both engines, ≥10× target)
-  + the larger indexed-only fleets;
+  + the larger indexed-only fleets + the fault-injection churn fleet;
 * ``--quick`` — < 60 s subset for per-PR regression tracking: paper cluster
-  (both engines) + the smoke fleet (both engines) + the sustained
-  100-machine fleet on the indexed engine only.
+  (both engines) + the smoke fleet (both engines) + the sustained and
+  churn 100-machine fleets on the indexed engine only.
 
 Usage::
 
@@ -154,6 +154,9 @@ def main(argv=None) -> int:
             print("[bench] fleet_100x2_sustained (indexed) ...", flush=True)
             results["scenarios"]["fleet_100x2_sustained"] = bench_scenario(
                 "fleet_100x2_sustained", seed=args.seed, commit=commit)
+            print("[bench] fleet_100x2_churn (indexed) ...", flush=True)
+            results["scenarios"]["fleet_100x2_churn"] = bench_scenario(
+                "fleet_100x2_churn", seed=args.seed, commit=commit)
         else:
             # the headline comparison: >=100 machines, >=100 jobs, both
             # engines.  The arrival trace is gap-free so the seed engine's
@@ -170,6 +173,10 @@ def main(argv=None) -> int:
                       flush=True)
                 results["scenarios"][name] = bench_scenario(
                     name, seed=args.seed, commit=commit)
+            print("[bench] fleet_100x2_churn (indexed; fault injection "
+                  "does not exist on the seed engine) ...", flush=True)
+            results["scenarios"]["fleet_100x2_churn"] = bench_scenario(
+                "fleet_100x2_churn", seed=args.seed, commit=commit)
 
     results["total_wall_time_s"] = round(time.perf_counter() - t_start, 2)
     args.out.write_text(json.dumps(results, indent=2) + "\n")

@@ -29,16 +29,34 @@ if [[ "${SKIP_TESTS:-0}" != "1" ]]; then
     # HYPOTHESIS_PROFILE=dev for deeper local exploration.
     export REPRO_FUZZ_SCENARIOS="${REPRO_FUZZ_SCENARIOS:-200}"
     export REPRO_ADAPTIVE_FUZZ_SCENARIOS="${REPRO_ADAPTIVE_FUZZ_SCENARIOS:-60}"
+    export REPRO_FAULT_FUZZ_SCENARIOS="${REPRO_FAULT_FUZZ_SCENARIOS:-60}"
     export REPRO_FUZZ_SEED="${REPRO_FUZZ_SEED:-0}"
     export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-tier1}"
     echo "== tier-1 tests (fast suite, -m 'not fuzz') =="
     python -m pytest -x -q -m "not fuzz"
-    echo "== fuzz profile (legacy parity x ${REPRO_FUZZ_SCENARIOS} + adaptive liveness x ${REPRO_ADAPTIVE_FUZZ_SCENARIOS}) =="
+    echo "== fuzz profile (legacy parity x ${REPRO_FUZZ_SCENARIOS} + adaptive liveness x ${REPRO_ADAPTIVE_FUZZ_SCENARIOS} + chaos liveness x ${REPRO_FAULT_FUZZ_SCENARIOS}) =="
     python -m pytest -x -q -m fuzz
 fi
 
 echo "== policy smoke (every registered policy on a tiny cluster) =="
 python -m repro.experiments policies --smoke
+
+echo "== fault-injection smoke (churn fleet drains; schedule reproducible) =="
+python - <<'PY'
+from repro.simcluster.largescale import run_scenario
+
+res = run_scenario("fleet_100x2_churn", scheduler="proposed", seed=0)
+assert res.fault_stats["crashes"] > 0, res.fault_stats
+unfinished = [j for j, r in res.jobs.items() if r.finish_time is None]
+assert not unfinished, f"jobs never finished under churn: {unfinished[:5]}"
+again = run_scenario("fleet_100x2_churn", scheduler="proposed", seed=0)
+assert again.fault_log == res.fault_log, "fault schedule not reproducible"
+print(f"  crashes={res.fault_stats['crashes']} "
+      f"lost={res.fault_stats['tasks_lost']} "
+      f"reexecuted={res.fault_stats['tasks_reexecuted']} "
+      f"bursts={res.fault_stats['bursts']} — all "
+      f"{len(res.jobs)} jobs finished; log byte-reproducible")
+PY
 
 echo "== quick sim benchmark =="
 python benchmarks/bench_sim.py --quick --out "$QUICK_OUT"

@@ -105,7 +105,7 @@ class Reconfigurator:
         self.validator: Optional[Callable[[int], bool]] = None
         self.stats = {"reconfigurations": 0, "parked": 0, "expired": 0,
                       "total_wait": 0.0, "park_declined": 0,
-                      "park_wins": 0, "park_losses": 0}
+                      "park_wins": 0, "park_losses": 0, "park_crashed": 0}
         # machines with a non-empty AQ / RQ, so match() touches only
         # machines that can possibly pair instead of sweeping all of them
         self._aq_nonempty: Set[int] = set()
@@ -232,6 +232,56 @@ class Reconfigurator:
         self.aq[m].remove(entry)            # identity: ParkedTask has eq=False
         self._aq_sync(m)
         return True
+
+    # -- fault integration (FaultConfig; never reached when faults are off) --
+    def machine_down(self, machine: int, now: float) -> List[TaskId]:
+        """Machine crashed: drop every AQ entry and RQ offer on it and abort
+        its in-flight hot-plugs (plugs never cross a machine boundary, so
+        returning each aborted plug's core to its donor VM keeps the
+        machine's vCPU sum — and the cluster conservation invariant —
+        exact).  Returns the task ids whose park or plug was cancelled so
+        the scheduler can make them schedulable again."""
+        cancelled: List[TaskId] = []
+        for entry in list(self.aq[machine]):
+            self._drop_parked_entry(entry.task, entry)
+            cancelled.append(entry.task)
+        self.aq[machine].clear()
+        self._aq_nonempty.discard(machine)
+        self.rq[machine].clear()
+        self.rq_depth[machine] = 0
+        self._rq_nonempty.discard(machine)
+        keep: List[PendingPlug] = []
+        for plug in self.in_flight:
+            if plug.machine == machine:
+                self.vcpus[plug.from_vm] += 1
+                cancelled.append(plug.task)
+            else:
+                keep.append(plug)
+        self.in_flight = keep
+        # unresolved expired-park outcomes on this machine die with it: a
+        # post-crash remote launch must not charge the machine's (reset)
+        # fail streak for a pre-crash park
+        for task in [t for t, m in self._expired_machine.items()
+                     if m == machine]:
+            del self._expired_machine[task]
+        self.stats["park_crashed"] += len(cancelled)
+        return cancelled
+
+    def machine_restarted(self, machine: int, now: float) -> None:
+        """Machine back up: its VMs boot with the base slot shape (the
+        pre-crash vCPU distribution redistributes within the machine, so
+        the sum is unchanged) and every pressure signal resets — EWMAs and
+        fail streaks from the pre-crash epoch would otherwise poison park
+        admission on the fresh machine."""
+        vpm = self.spec.vms_per_machine
+        for vm in range(machine * vpm, (machine + 1) * vpm):
+            self.vcpus[vm] = self.spec.base_map_slots
+        self.offer_ewma[machine] = None
+        self.last_offer[machine] = None
+        self.free_ewma[machine] = None
+        self.last_free[machine] = None
+        self.fail_streak[machine] = 0
+        self.last_fail[machine] = None
 
     # -- matching ------------------------------------------------------------
     def match(self, now: float, donor_ok=None) -> List[PendingPlug]:

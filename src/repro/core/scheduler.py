@@ -88,6 +88,9 @@ class SchedulerBase:
         # (the adaptive park-admission signal), maintained at the same
         # transitions as the map_done flag
         self.map_open_jobs = 0
+        # fault integration (FaultConfig): nodes currently crashed.  Always
+        # empty when faults are off, so every guard on it is parity-inert.
+        self.down_nodes: Set[int] = set()
 
     # -- lifecycle ----------------------------------------------------------
     def job_added(self, job: JobSpec, now: float) -> None:
@@ -149,6 +152,80 @@ class SchedulerBase:
         pass
 
     def on_task_finished(self, job: JobRuntime, task: TaskId, now: float) -> None:
+        pass
+
+    # -- fault integration (FaultConfig; never called when faults are off) --
+    def node_down(self, nodes: List[int], now: float) -> None:
+        """Simulator hook: these nodes just crashed.  Down nodes stop
+        heartbeating (so ``select`` is never offered their slots) and are
+        excluded as park targets until they restart."""
+        self.down_nodes.update(nodes)
+        self.on_nodes_down(nodes, now)
+
+    def node_up(self, nodes: List[int], now: float) -> None:
+        self.down_nodes.difference_update(nodes)
+        self.on_nodes_up(nodes, now)
+
+    def on_nodes_down(self, nodes: List[int], now: float) -> None:
+        pass
+
+    def on_nodes_up(self, nodes: List[int], now: float) -> None:
+        pass
+
+    def task_lost(self, task: TaskId, node: int, now: float) -> None:
+        """A node crash killed this *running* task: make it schedulable
+        again.  The exact inverse of the start transition — restores the
+        pending sets, the lazy heaps (popped entries never resurface on
+        their own, so the index is pushed back), ``total_pending_maps``,
+        the per-node local counters, and the bootstrap precedence set when
+        a job loses every task it ever ran.  ``map_open_jobs`` needs no
+        recount: a running map implies the phase was still open, and a
+        lost reduce cannot reopen a finished map phase."""
+        job = self.jobs[task.job_id]
+        if task.kind == TaskKind.MAP:
+            if job.running_map.pop(task.index, None) is None:
+                return                       # already resolved (twin finished)
+            if task.index in job.completed_map or task.index in job.pending_map:
+                return
+            self._repend_map(job, task.index)
+        else:
+            if job.running_reduce.pop(task.index, None) is None:
+                return
+            if (task.index in job.completed_reduce
+                    or task.index in job.pending_reduce):
+                return
+            job.pending_reduce.add(task.index)
+            heapq.heappush(job._pending_reduce_heap, task.index)
+            if job.map_done:
+                self.ready_pending_reduces += 1
+        if job.has_progress and not job.started:
+            # the job lost every task it ever ran: it needs a bootstrap
+            # probe again (Algorithm 2's precedence set) so the estimator
+            # can re-seed — it re-enters at the back of the set, which only
+            # reorders against other re-bootstrapped jobs
+            job.has_progress = False
+            self.bootstrap[job.spec.job_id] = job
+        self.on_task_lost(job, task, now)
+
+    def _repend_map(self, job: JobRuntime, idx: int) -> None:
+        """Inverse of ``_drop_pending_map`` + the heap pops it implies."""
+        job.pending_map.add(idx)
+        heapq.heappush(job._pending_map_heap, idx)
+        self.total_pending_maps += 1
+        placement = job.spec.block_placement
+        if idx < len(placement):
+            counts = self.local_pending_count
+            for node in set(placement[idx]):
+                counts[node] += 1
+                heapq.heappush(job._local_heaps.setdefault(node, []), idx)
+
+    def on_task_lost(self, job: JobRuntime, task: TaskId, now: float) -> None:
+        pass
+
+    def parked_task_crashed(self, task: TaskId, now: float) -> None:
+        """The machine holding this task's AQ entry (or in-flight plug)
+        crashed; the task is still pending and simply re-enters normal
+        scheduling."""
         pass
 
     # -- indexed transitions -------------------------------------------------
@@ -264,6 +341,10 @@ class CompletionTimeScheduler(SchedulerBase):
         # iterates without rebuilding a list
         self._edf: List[Tuple[float, int, str]] = []
         self._edf_jobs: List[JobRuntime] = []
+        # fault integration: crashed machines, maintained by on_nodes_down/
+        # on_nodes_up so the overload latch prices pressure against the
+        # *effective* capacity (0 whenever faults are off)
+        self._machines_down = 0
 
     # -- Algorithm 2 line 2 + lines 17-20 ----------------------------------
     def on_job_added(self, job: JobRuntime, now: float) -> None:
@@ -323,6 +404,11 @@ class CompletionTimeScheduler(SchedulerBase):
         a = self.adaptive
         pending = self.total_pending_maps
         reduce_aware = self.overload_policy == "reduce_aware"
+        # effective capacity: crashed nodes serve nothing, so the latch
+        # prices pressure against the surviving fleet (identical values —
+        # and floats — to the static bars while no node is down)
+        slots = self.max_slots - len(self.down_nodes) * self.spec.base_map_slots
+        machines = self.spec.num_machines - self._machines_down
         if self.overload_mode:
             # the plain latch stays until the cluster fully drains; select
             # never runs while idle, so the actual release happens when the
@@ -330,19 +416,43 @@ class CompletionTimeScheduler(SchedulerBase):
             # reduce-aware latch releases on map-backlog drain.
             if not self.active or (reduce_aware and self.map_open_jobs == 0):
                 self.overload_mode = False
+            elif (self.spec.faults.enabled and self.spec.faults.crash_mtbf > 0
+                    and pending == 0 and self.ready_pending_reduces == 0):
+                # under churn the "next job finds an empty cluster" release
+                # may never fire (crashes keep re-pending work, stretching
+                # the drain past the arrival horizon) — an empty backlog is
+                # the epoch's true end, so the latch must not wedge there.
+                # Gated on the crash process, not just `enabled`: a config
+                # with no crash source cannot wedge, and stays bit-exact
+                # with the faults-off latch semantics
+                self.overload_mode = False
         elif self.active:
             # both conditions strictly: a backlogged cluster with few wide
             # jobs (the paper's closed mix) is EDF's home regime — only the
             # many-small-jobs crowd flips the economics
             crowd = self.map_open_jobs if reduce_aware else len(self.active)
-            if (pending >= a.overload_pending_factor * self.max_slots
-                    and crowd
-                    >= a.overload_active_factor * self.spec.num_machines):
+            if (pending >= a.overload_pending_factor * slots
+                    and crowd >= a.overload_active_factor * machines):
                 self.overload_mode = True
         return self.overload_mode
 
     def on_task_finished(self, job: JobRuntime, task: TaskId, now: float) -> None:
         self._recompute_demand(job, now)
+
+    def on_task_lost(self, job: JobRuntime, task: TaskId, now: float) -> None:
+        # remaining work grew: the Eq.-10 demand must see it immediately
+        self._recompute_demand(job, now)
+
+    def parked_task_crashed(self, task: TaskId, now: float) -> None:
+        self._unpark(task)
+
+    def on_nodes_down(self, nodes: List[int], now: float) -> None:
+        self._machines_down = len(
+            {self.spec.machine_of(v) for v in self.down_nodes})
+
+    def on_nodes_up(self, nodes: List[int], now: float) -> None:
+        self._machines_down = len(
+            {self.spec.machine_of(v) for v in self.down_nodes})
 
     def _recompute_demand(self, job: JobRuntime, now: float) -> None:
         job.demand = self.estimator.demand(
@@ -599,7 +709,7 @@ class CompletionTimeScheduler(SchedulerBase):
         if adaptive.enabled and (
                 self.overload_mode
                 or crowd >= adaptive.park_active_factor
-                * self.spec.num_machines):
+                * (self.spec.num_machines - self._machines_down)):
             # Overload latch or a crowd of active jobs: per-job shares sit
             # far below job widths, every parked map lands on its job's
             # phase-critical path, and even live-offer parks queue behind
@@ -607,6 +717,14 @@ class CompletionTimeScheduler(SchedulerBase):
             # starting remotely right now, so both parking paths (S_rq and
             # S_aq) are bypassed.
             return Launch(task, node, local=False)
+        if self.down_nodes:
+            # crashed nodes cannot host a parked task; with every replica
+            # down the task runs remotely (re-read from the durable store)
+            # until re-replication restores a live replica
+            placement = tuple(v for v in placement
+                              if v not in self.down_nodes)
+            if not placement:
+                return Launch(task, node, local=False)
         # S_rq: data nodes by RQ entries desc (a pre-offered donor core means
         # wait ≈ hot-plug latency); else S_aq: data nodes by AQ entries asc.
         s_rq = sorted(placement, key=lambda v: -self.reconfig.rq_len(v))
@@ -637,6 +755,13 @@ class CompletionTimeScheduler(SchedulerBase):
                 prof = job.spec.profile
                 breakeven = (prof.map_time * prof.remote_penalty
                              * self.spec.remote_penalty_scale)
+                if (self.spec.faults.enabled
+                        and self.spec.faults.machine_classes):
+                    # heterogeneous fleet: the bar is per-class — a slow
+                    # machine's map takes longer and its fabric makes the
+                    # remote read costlier, both scale the break-even
+                    mc = self.spec.machine_class(self.spec.machine_of(p))
+                    breakeven *= mc.speed * mc.fabric
                 ok, wait_bound = self.reconfig.park_decision(
                     self.spec.machine_of(p), now, breakeven)
                 if not ok:

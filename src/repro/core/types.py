@@ -11,6 +11,7 @@ HDFS-style block placement) in a backend-agnostic way: the same types drive
 from __future__ import annotations
 
 import enum
+import functools
 import heapq
 import math
 from dataclasses import asdict, dataclass, field
@@ -350,6 +351,154 @@ class AdaptiveConfig:
 
 
 @dataclass(frozen=True)
+class MachineClass:
+    """One hardware generation in a heterogeneous fleet.
+
+    Machines are assigned to classes round-robin over the weight-expanded
+    pattern (weights 3,1 -> m % 4 in {0,1,2} is class 0), so any fleet size
+    gets the requested mix deterministically.
+
+    Attributes:
+      name: label for logs/atlas columns.
+      weight: relative share of machines in this class (>= 1).
+      speed: task-duration multiplier on this class (> 1 = slower
+        hardware generation; scales map *and* reduce compute).
+      fabric: remote-read-penalty multiplier for map tasks running on this
+        class (NIC/uplink generation; composes with
+        ``ClusterSpec.remote_penalty_scale``).
+      mtbf_scale: crash-rate multiplier — this class's mean time between
+        failures is ``FaultConfig.crash_mtbf * mtbf_scale`` (older
+        generations fail more often: ``mtbf_scale < 1``).
+    """
+
+    name: str = "base"
+    weight: int = 1
+    speed: float = 1.0
+    fabric: float = 1.0
+    mtbf_scale: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.weight < 1:
+            raise ValueError("machine-class weight must be >= 1")
+        if self.speed <= 0:
+            raise ValueError("machine-class speed must be positive")
+        if self.fabric < 0:
+            raise ValueError("machine-class fabric must be non-negative")
+        if self.mtbf_scale <= 0:
+            raise ValueError("machine-class mtbf_scale must be positive")
+
+    def to_dict(self) -> Dict[str, object]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "MachineClass":
+        return cls(**d)
+
+
+_BASE_CLASS = MachineClass()
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Fault-injection + heterogeneity layer for the simulated fleet.
+
+    Default **off** — with ``enabled=False`` every knob is inert: the
+    engine is bit-exact against the frozen legacy engine (pinned by the
+    parity fuzz suite, which fuzzes *disabled* configs), and the config is
+    omitted from ``ClusterSpec.to_dict`` so every pre-fault sweep-cache
+    hash and pair key is untouched.
+
+    When enabled, ``ClusterSim`` drives deterministic fault processes from
+    per-machine RNG streams seeded by (sim seed, machine) only — the
+    crash/restart schedule is a pure function of (config, seed),
+    independent of scheduler decisions (pinned by the determinism test):
+
+    * **node churn** — each machine crashes after Exp(mtbf) up-time
+      (class-scaled) and restarts after Exp(mttr) down-time; running tasks
+      on its VMs are lost and re-enqueued against surviving replicas;
+    * **re-replication** — a machine down longer than the grace window
+      gets its pending blocks re-replicated (from the durable store) onto
+      a surviving node, restoring locality after the window;
+    * **straggler bursts** — correlated slowdown episodes per machine
+      (every task launched on a bursting machine is slowed), instead of
+      the i.i.d. per-task ``straggler_prob``;
+    * **heterogeneous machine classes** — per-class duration/fabric
+      multipliers threaded through ``task_duration`` and the
+      reconfigurator's park break-even bar.
+    """
+
+    enabled: bool = False
+    # -- node churn (0 = no crashes even when enabled) -------------------
+    crash_mtbf: float = 0.0       # mean seconds of up-time per machine
+    crash_mttr: float = 90.0      # mean seconds of down-time per crash
+    crash_warmup: float = 0.0     # no crashes before this sim time
+    # -- re-replication ---------------------------------------------------
+    rereplicate_after: float = 60.0   # grace window before blocks re-home
+    # -- correlated straggler bursts (0 = off) ----------------------------
+    burst_rate: float = 0.0       # mean seconds between episodes per machine
+    burst_duration: float = 30.0  # seconds one episode lasts
+    burst_slowdown: float = 2.5   # duration multiplier while bursting
+    # -- heterogeneity (() = homogeneous fleet) ---------------------------
+    machine_classes: Tuple[MachineClass, ...] = ()
+
+    def __post_init__(self) -> None:
+        if self.crash_mtbf < 0:
+            raise ValueError("crash_mtbf must be non-negative")
+        if self.crash_mttr <= 0:
+            raise ValueError("crash_mttr must be positive")
+        if self.crash_warmup < 0:
+            raise ValueError("crash_warmup must be non-negative")
+        if self.rereplicate_after < 0:
+            raise ValueError("rereplicate_after must be non-negative")
+        if self.burst_rate < 0:
+            raise ValueError("burst_rate must be non-negative")
+        if self.burst_duration <= 0:
+            raise ValueError("burst_duration must be positive")
+        if self.burst_slowdown < 1.0:
+            raise ValueError("burst_slowdown must be >= 1")
+        if not isinstance(self.machine_classes, tuple):
+            object.__setattr__(self, "machine_classes",
+                               tuple(self.machine_classes))
+
+    @property
+    def active(self) -> bool:
+        """Any fault process actually running (vs. enabled-but-all-off)."""
+        return self.enabled and (self.crash_mtbf > 0 or self.burst_rate > 0
+                                 or bool(self.machine_classes))
+
+    def machine_class(self, machine: int) -> MachineClass:
+        """Class of physical machine ``machine`` (round-robin over the
+        weight-expanded class pattern); the base class when disabled or
+        homogeneous."""
+        if not (self.enabled and self.machine_classes):
+            return _BASE_CLASS
+        pattern = _class_pattern(self.machine_classes)
+        return pattern[machine % len(pattern)]
+
+    def to_dict(self) -> Dict[str, object]:
+        d = asdict(self)
+        d["machine_classes"] = [asdict(c) for c in self.machine_classes]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "FaultConfig":
+        d = dict(d)
+        d["machine_classes"] = tuple(
+            MachineClass.from_dict(c) if isinstance(c, dict) else c
+            for c in d.get("machine_classes", ()))
+        return cls(**d)
+
+
+@functools.lru_cache(maxsize=None)
+def _class_pattern(classes: Tuple[MachineClass, ...]
+                   ) -> Tuple[MachineClass, ...]:
+    pattern: List[MachineClass] = []
+    for c in classes:
+        pattern.extend([c] * c.weight)
+    return tuple(pattern)
+
+
+@dataclass(frozen=True)
 class ClusterSpec:
     """Static shape of the virtualized cluster (paper §5: 20 machines,
     2 map + 2 reduce slots per node)."""
@@ -367,6 +516,7 @@ class ClusterSpec:
     # (1.0 = the paper's 2012 shared 1GbE; ~0.25 = 10GbE; ~0.0625 = 40GbE)
     remote_penalty_scale: float = 1.0
     adaptive: AdaptiveConfig = AdaptiveConfig()
+    faults: FaultConfig = FaultConfig()
 
     @property
     def num_nodes(self) -> int:
@@ -375,17 +525,32 @@ class ClusterSpec:
     def machine_of(self, node: int) -> int:
         return node // self.vms_per_machine
 
+    def machine_class(self, machine: int) -> MachineClass:
+        """Hardware class of physical machine ``machine`` (heterogeneous
+        fleets live on ``FaultConfig``; the base class otherwise)."""
+        return self.faults.machine_class(machine)
+
     def to_dict(self) -> Dict[str, object]:
         # asdict introspects fields: the experiment cache hashes this dict,
         # so a hand-maintained list that went stale would alias genuinely
         # different clusters onto one cache cell
-        return asdict(self)
+        d = asdict(self)
+        if self.faults == FaultConfig():
+            # cache compatibility: a default (disabled) fault layer is
+            # omitted so pre-fault sweep caches, pair keys and the pinned
+            # cell hashes in tests/test_policies.py are byte-identical
+            del d["faults"]
+        else:
+            d["faults"] = self.faults.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "ClusterSpec":
         d = dict(d)
         if isinstance(d.get("adaptive"), dict):
             d["adaptive"] = AdaptiveConfig.from_dict(d["adaptive"])
+        if isinstance(d.get("faults"), dict):
+            d["faults"] = FaultConfig.from_dict(d["faults"])
         return cls(**d)
 
 

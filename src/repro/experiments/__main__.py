@@ -75,11 +75,31 @@ def _parse_policy(token: str) -> PolicySpec:
         raise SystemExit(f"bad policy {token!r}: {e}")
 
 
+def _parse_faults(token):
+    """A --faults CLI token: named profile from ``FAULT_PROFILES`` or an
+    inline ``FaultConfig`` JSON object."""
+    from repro.core.types import FaultConfig
+    if token in regimes_mod.FAULT_PROFILES:
+        return regimes_mod.FAULT_PROFILES[token]
+    if token.lstrip().startswith("{"):
+        import json
+        try:
+            return FaultConfig.from_dict(json.loads(token))
+        except (ValueError, TypeError) as e:
+            raise SystemExit(f"bad fault config {token!r}: {e}")
+    raise SystemExit(
+        f"bad --faults {token!r}: expected a profile name "
+        f"({', '.join(regimes_mod.FAULT_PROFILES)}) or FaultConfig JSON")
+
+
 def _cluster_from_args(args) -> ClusterSpec:
-    return ClusterSpec(num_machines=args.machines,
+    spec = ClusterSpec(num_machines=args.machines,
                        vms_per_machine=args.vms,
                        replication=args.replication,
                        remote_penalty_scale=args.remote_penalty_scale)
+    if getattr(args, "faults", None):
+        spec = dataclasses.replace(spec, faults=_parse_faults(args.faults))
+    return spec
 
 
 def _trace_ref_from_args(args) -> TraceRef:
@@ -107,6 +127,10 @@ def _add_grid_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--remote-penalty-scale", type=float, default=1.0,
                    help="network-fabric calibration of the remote-read "
                         "penalty (1.0 = 1GbE, 0.25 ~ 10GbE, 0.0625 ~ 40GbE)")
+    p.add_argument("--faults", default=None,
+                   help="fault-injection profile (churn_lo, churn_hi, "
+                        "churn_hetero) or inline FaultConfig JSON, e.g. "
+                        '\'{"enabled": true, "crash_mtbf": 1800}\'')
     p.add_argument("--cache", type=Path, default=DEFAULT_CACHE,
                    help=f"result cache directory (default: {DEFAULT_CACHE})")
     p.add_argument("--workers", type=int, default=0,
@@ -184,9 +208,21 @@ def cmd_regimes(args) -> int:
                     if args.replications is not None else (
                         regimes_mod.QUICK_REPLICATIONS if args.quick
                         else regimes_mod.FULL_REPLICATIONS))
+    faults = tuple(args.faults) if args.faults is not None else (
+        regimes_mod.QUICK_FAULTS if args.quick else regimes_mod.FULL_FAULTS)
+    for fp in faults:
+        if fp not in regimes_mod.FAULT_PROFILES:
+            raise SystemExit(f"unknown fault profile {fp!r}; available: "
+                             f"{', '.join(regimes_mod.FAULT_PROFILES)}")
+    swim = tuple(args.swim) if args.swim is not None else (
+        regimes_mod.QUICK_SWIM if args.quick else regimes_mod.FULL_SWIM)
+    for sw in swim:
+        if sw not in regimes_mod.SWIM_TRACES:
+            raise SystemExit(f"unknown SWIM trace {sw!r}; available: "
+                             f"{', '.join(regimes_mod.SWIM_TRACES)}")
     report = regimes_mod.run_regimes(
         presets, shapes, seeds, args.cache, fabrics=fabrics,
-        replications=replications,
+        replications=replications, faults=faults, swim=swim,
         workers=args.workers,
         progress=print if args.verbose else None)
     out = report.save_json(args.out)
@@ -390,6 +426,16 @@ def main(argv=None) -> int:
                     help="extra HDFS replication factors swept on the first "
                          f"shape (full default: "
                          f"{regimes_mod.FULL_REPLICATIONS})")
+    rg.add_argument("--faults", nargs="*", default=None,
+                    help="fault profiles swept over the fault shapes "
+                         f"({', '.join(regimes_mod.FAULT_SHAPES)}): "
+                         + ", ".join(p for p in regimes_mod.FAULT_PROFILES
+                                     if p != regimes_mod.BASE_FAULTS)
+                         + f" (full default: {regimes_mod.FULL_FAULTS})")
+    rg.add_argument("--swim", nargs="*", default=None,
+                    help="committed SWIM trace columns on the first shape: "
+                         + ", ".join(regimes_mod.SWIM_TRACES)
+                         + f" (full default: {regimes_mod.FULL_SWIM})")
     rg.add_argument("--cache", type=Path, default=DEFAULT_CACHE)
     rg.add_argument("--workers", type=int, default=0)
     rg.add_argument("--out", type=Path, default=Path("regimes.json"),

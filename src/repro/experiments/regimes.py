@@ -35,10 +35,11 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Sequence, Tuple, Union
 
+from repro.core.types import FaultConfig, MachineClass
 from repro.experiments.runner import ExperimentSpec, TraceRef, run_experiment
 from repro.experiments.stats import PairedComparison, compare_throughput
 from repro.simcluster.largescale import FLEET_SHAPES, fleet_shape
-from repro.simcluster.traces import PRESETS
+from repro.simcluster.traces import PRESETS, Trace
 
 REGIME_PRESETS: Tuple[str, ...] = ("heavy_tail", "diurnal", "bursty",
                                    "shuffle_heavy", "saturated")
@@ -65,11 +66,50 @@ QUICK_FABRICS: Tuple[str, ...] = ()
 BASE_REPLICATION = 1
 FULL_REPLICATIONS: Tuple[int, ...] = (3,)            # extra cells, 20x2 only
 QUICK_REPLICATIONS: Tuple[int, ...] = ()
-REPORT_VERSION = 3
+# fault-injection axis: crash-rate x heterogeneity profiles (see
+# repro.core.types.FaultConfig).  churn_lo/churn_hi vary the per-machine
+# crash MTBF; churn_hetero adds a 3:1 new/old machine mix where the "old"
+# quartile is 40% slower, pays a 25% stiffer remote penalty, and crashes
+# twice as often.  Fault cells sweep every preset over FAULT_SHAPES —
+# the axis answers "which policy column degrades gracefully under churn?"
+HETERO_MIX: Tuple[MachineClass, ...] = (
+    MachineClass(name="new", weight=3),
+    MachineClass(name="old", weight=1, speed=1.4, fabric=1.25,
+                 mtbf_scale=0.5),
+)
+FAULT_PROFILES: Dict[str, FaultConfig] = {
+    "none": FaultConfig(),
+    "churn_lo": FaultConfig(enabled=True, crash_mtbf=3600.0,
+                            crash_mttr=120.0, rereplicate_after=60.0),
+    "churn_hi": FaultConfig(enabled=True, crash_mtbf=1200.0,
+                            crash_mttr=120.0, rereplicate_after=60.0),
+    "churn_hetero": FaultConfig(enabled=True, crash_mtbf=1200.0,
+                                crash_mttr=120.0, rereplicate_after=60.0,
+                                machine_classes=HETERO_MIX),
+}
+BASE_FAULTS = "none"
+FULL_FAULTS: Tuple[str, ...] = ("churn_lo", "churn_hi", "churn_hetero")
+QUICK_FAULTS: Tuple[str, ...] = ()
+FAULT_SHAPES: Tuple[str, ...] = ("20x2", "50x2")
+# real-trace columns: imported SWIM/Facebook-format cluster logs committed
+# as repro-trace/v1 fixtures (see data/swim_fb_sample.log for the raw log
+# and the import provenance).  Path traces hash their file bytes into the
+# cell descriptor, so editing a fixture invalidates exactly its cells.
+_DATA_DIR = Path(__file__).resolve().parent / "data"
+SWIM_TRACES: Dict[str, Path] = {
+    "swim_fb": _DATA_DIR / "swim_fb_sample.jsonl",
+}
+FULL_SWIM: Tuple[str, ...] = ("swim_fb",)
+QUICK_SWIM: Tuple[str, ...] = ()
+REPORT_VERSION = 4
 
 
 def scaled_jobs(preset: str, machines: int) -> int:
-    """Scale a preset's job count with the fleet (baseline: 20 machines)."""
+    """Scale a preset's job count with the fleet (baseline: 20 machines).
+    Imported SWIM traces are fixed arrival logs — their job count does not
+    scale."""
+    if preset in SWIM_TRACES:
+        return len(Trace.load(SWIM_TRACES[preset]).jobs)
     base = PRESETS[preset].num_jobs
     return max(base, round(base * machines / 20))
 
@@ -77,23 +117,35 @@ def scaled_jobs(preset: str, machines: int) -> int:
 def regime_spec(preset: str, shape: str,
                 seeds: Sequence[int] = FULL_SEEDS,
                 fabric: str = BASE_FABRIC,
-                replication: int = BASE_REPLICATION) -> ExperimentSpec:
+                replication: int = BASE_REPLICATION,
+                faults: str = BASE_FAULTS) -> ExperimentSpec:
     """One atlas cell as a sweep spec: scaled preset trace x shape x every
     atlas policy column, trace seed coupled to the sim seed (every
     replication re-rolls arrivals and placements for *all* schedulers
     alike).  ``fabric`` calibrates the remote-read penalty via
     ``ClusterSpec.remote_penalty_scale``; ``replication`` sets the HDFS
-    replica count."""
+    replica count; ``faults`` names a ``FAULT_PROFILES`` entry (crash
+    churn / heterogeneity).  ``preset`` may also name a committed SWIM
+    trace fixture (``SWIM_TRACES``) — then the trace is the imported log,
+    byte-hashed into the cell descriptor."""
     machines, _ = FLEET_SHAPES[shape]
-    config = dataclasses.replace(PRESETS[preset],
-                                 num_jobs=scaled_jobs(preset, machines))
+    if preset in SWIM_TRACES:
+        trace = TraceRef(path=str(SWIM_TRACES[preset]))
+    else:
+        config = dataclasses.replace(PRESETS[preset],
+                                     num_jobs=scaled_jobs(preset, machines))
+        trace = TraceRef(config=config)
     cluster = fleet_shape(shape, replication=replication)
     if fabric != BASE_FABRIC:
         cluster = dataclasses.replace(cluster,
                                       remote_penalty_scale=FABRICS[fabric])
+    if faults != BASE_FAULTS:
+        cluster = dataclasses.replace(cluster,
+                                      faults=FAULT_PROFILES[faults])
+    suffix = "" if faults == BASE_FAULTS else f"-{faults}"
     return ExperimentSpec(
-        name=f"regime-{preset}-{shape}-{fabric}-r{replication}",
-        traces=(TraceRef(config=config),),
+        name=f"regime-{preset}-{shape}-{fabric}-r{replication}{suffix}",
+        traces=(trace,),
         clusters=(cluster,),
         schedulers=SCHEDULERS,
         seeds=tuple(seeds),
@@ -132,6 +184,7 @@ class RegimeCell:
     mean_makespan: Dict[str, float]
     fabric: str = BASE_FABRIC
     replication: int = BASE_REPLICATION
+    faults: str = BASE_FAULTS
 
     def verdict(self) -> str:
         """Proposed-vs-fair verdict (the legacy fixed-policy column)."""
@@ -164,6 +217,7 @@ class RegimeCell:
             "shape": self.shape,
             "fabric": self.fabric,
             "replication": self.replication,
+            "faults": self.faults,
             "machines": self.machines,
             "vms": self.vms,
             "num_jobs": self.num_jobs,
@@ -202,16 +256,19 @@ class RegimeReport:
     cached: int
     fabrics: Tuple[str, ...] = (BASE_FABRIC,)
     replications: Tuple[int, ...] = (BASE_REPLICATION,)
+    fault_profiles: Tuple[str, ...] = (BASE_FAULTS,)
+    swim: Tuple[str, ...] = ()
     version: int = REPORT_VERSION
 
     def cell(self, preset: str, shape: str,
              fabric: str = BASE_FABRIC,
-             replication: int = BASE_REPLICATION) -> RegimeCell:
+             replication: int = BASE_REPLICATION,
+             faults: str = BASE_FAULTS) -> RegimeCell:
         for c in self.cells:
-            if (c.preset, c.shape, c.fabric, c.replication) \
-                    == (preset, shape, fabric, replication):
+            if (c.preset, c.shape, c.fabric, c.replication, c.faults) \
+                    == (preset, shape, fabric, replication, faults):
                 return c
-        raise KeyError((preset, shape, fabric, replication))
+        raise KeyError((preset, shape, fabric, replication, faults))
 
     def to_dict(self) -> Dict[str, object]:
         return {
@@ -221,6 +278,8 @@ class RegimeReport:
             "seeds": list(self.seeds),
             "fabrics": list(self.fabrics),
             "replications": list(self.replications),
+            "fault_profiles": list(self.fault_profiles),
+            "swim": list(self.swim),
             "schedulers": list(SCHEDULERS),
             "simulated": self.simulated,
             "cached": self.cached,
@@ -243,7 +302,7 @@ class RegimeReport:
             g, a, r = c.vs_fair, c.adaptive_vs_fair, c.ra_vs_fair
             lines.append(
                 f"  {c.preset:13s} {c.shape:6s} {c.fabric:5s} "
-                f"r{c.replication} ({c.num_jobs:3d} jobs)  "
+                f"r{c.replication} {c.faults:12s} ({c.num_jobs:3d} jobs)  "
                 f"prop {g.mean_gain_pct:+6.1f}% "
                 f"[{g.ci_lo_pct:+6.1f}%, {g.ci_hi_pct:+6.1f}%] "
                 f"-> {c.verdict():4s}  "
@@ -259,15 +318,15 @@ class RegimeReport:
 
     def to_markdown(self) -> str:
         head = [
-            "| regime | cluster | fabric | repl | jobs "
+            "| regime | cluster | fabric | repl | faults | jobs "
             "| proposed vs fair (95% CI) | verdict "
             "| adaptive vs fair (95% CI) | verdict "
             "| adaptive_ra vs fair (95% CI) | verdict "
             "| delay vs fair | verdict | adaptive vs proposed "
             "| Δ locality (prop/adapt/ra/delay) "
             "| Δ deadlines (prop/adapt/ra) |",
-            "| --- | --- | --- | ---: | ---: | --- | --- | --- | --- | --- "
-            "| --- | --- | --- | --- | --- | --- |",
+            "| --- | --- | --- | ---: | --- | ---: | --- | --- | --- | --- "
+            "| --- | --- | --- | --- | --- | --- | --- |",
         ]
         rows = []
         for c in self.cells:
@@ -275,7 +334,7 @@ class RegimeReport:
             r, d, ap = c.ra_vs_fair, c.delay_vs_fair, c.adaptive_vs_proposed
             rows.append(
                 f"| {c.preset} | {c.shape} | {c.fabric} | {c.replication} "
-                f"| {c.num_jobs} "
+                f"| {c.faults} | {c.num_jobs} "
                 f"| {f.mean_gain_pct:+.1f}% [{f.ci_lo_pct:+.1f}%, "
                 f"{f.ci_hi_pct:+.1f}%] | {c.verdict()} "
                 f"| {a.mean_gain_pct:+.1f}% [{a.ci_lo_pct:+.1f}%, "
@@ -304,13 +363,20 @@ def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
                 cache_dir: Union[str, Path] = ".exp-cache",
                 *, fabrics: Sequence[str] = (),
                 replications: Sequence[int] = (),
+                faults: Sequence[str] = (),
+                swim: Sequence[str] = (),
                 workers: int = 0, n_boot: int = 2000,
                 progress=None) -> RegimeReport:
     """Run (or re-serve from cache) the full atlas grid and distill the
     per-regime verdicts.  ``fabrics`` adds a remote-penalty sweep and
     ``replications`` an HDFS-replica sweep: each extra fabric/replication
     re-runs every preset on the *first* shape (the paper's 20x2 unless
-    overridden) with the scaled remote-read penalty / replica count."""
+    overridden) with the scaled remote-read penalty / replica count.
+    ``faults`` names ``FAULT_PROFILES`` entries: each profile re-runs every
+    preset over the ``FAULT_SHAPES`` present in ``shapes`` (falling back to
+    the first shape) with the profile's crash churn / heterogeneity.
+    ``swim`` names committed SWIM trace fixtures (``SWIM_TRACES``) run as
+    extra regime columns on the first shape."""
     for f in fabrics:
         if f not in FABRICS:
             raise ValueError(f"unknown fabric {f!r}; available: "
@@ -318,19 +384,34 @@ def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
     for r in replications:
         if not isinstance(r, int) or r < 1:
             raise ValueError(f"replication must be a positive int, got {r!r}")
+    for fp in faults:
+        if fp not in FAULT_PROFILES:
+            raise ValueError(f"unknown fault profile {fp!r}; available: "
+                             f"{', '.join(FAULT_PROFILES)}")
+    for sw in swim:
+        if sw not in SWIM_TRACES:
+            raise ValueError(f"unknown SWIM trace {sw!r}; available: "
+                             f"{', '.join(SWIM_TRACES)}")
     cells: List[RegimeCell] = []
     simulated = cached = 0
-    points = [(preset, shape, BASE_FABRIC, BASE_REPLICATION)
+    fault_shapes = tuple(s for s in FAULT_SHAPES if s in shapes) \
+        or (shapes[0],)
+    points = [(preset, shape, BASE_FABRIC, BASE_REPLICATION, BASE_FAULTS)
               for preset in presets for shape in shapes]
-    points += [(preset, shapes[0], fabric, BASE_REPLICATION)
+    points += [(sw, shapes[0], BASE_FABRIC, BASE_REPLICATION, BASE_FAULTS)
+               for sw in swim]
+    points += [(preset, shapes[0], fabric, BASE_REPLICATION, BASE_FAULTS)
                for fabric in fabrics for preset in presets
                if fabric != BASE_FABRIC]
-    points += [(preset, shapes[0], BASE_FABRIC, repl)
+    points += [(preset, shapes[0], BASE_FABRIC, repl, BASE_FAULTS)
                for repl in replications for preset in presets
                if repl != BASE_REPLICATION]
-    for preset, shape, fabric, repl in points:
+    points += [(preset, shape, BASE_FABRIC, BASE_REPLICATION, fp)
+               for fp in faults for shape in fault_shapes
+               for preset in presets if fp != BASE_FAULTS]
+    for preset, shape, fabric, repl, fprofile in points:
         spec = regime_spec(preset, shape, seeds, fabric=fabric,
-                           replication=repl)
+                           replication=repl, faults=fprofile)
         report = run_experiment(spec, cache_dir, workers=workers,
                                 progress=progress)
         simulated += report.simulated
@@ -342,6 +423,7 @@ def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
             shape=shape,
             fabric=fabric,
             replication=repl,
+            faults=fprofile,
             machines=machines,
             vms=vms,
             num_jobs=scaled_jobs(preset, machines),
@@ -371,7 +453,8 @@ def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
         ))
         if progress:
             c = cells[-1]
-            progress(f"[{preset}/{shape}/{fabric}/r{repl}] proposed "
+            progress(f"[{preset}/{shape}/{fabric}/r{repl}/{fprofile}] "
+                     f"proposed "
                      f"{c.vs_fair.mean_gain_pct:+.1f}% -> {c.verdict()}, "
                      f"adaptive {c.adaptive_vs_fair.mean_gain_pct:+.1f}% "
                      f"-> {c.adaptive_verdict()}, "
@@ -384,4 +467,7 @@ def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
                             f for f in fabrics if f != BASE_FABRIC),
                         replications=(BASE_REPLICATION,) + tuple(
                             r for r in replications
-                            if r != BASE_REPLICATION))
+                            if r != BASE_REPLICATION),
+                        fault_profiles=(BASE_FAULTS,) + tuple(
+                            fp for fp in faults if fp != BASE_FAULTS),
+                        swim=tuple(swim))

@@ -19,7 +19,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.types import ClusterSpec, JobSpec
+from repro.core.types import ClusterSpec, FaultConfig, JobSpec, MachineClass
 from repro.simcluster.workloads import (WORKLOADS, default_deadline, make_job,
                                         n_map_tasks)
 
@@ -42,11 +42,15 @@ class Scenario:
     skew: float = 1.0
     replication: int = 3
     deadline_slack: float = 2.2
+    # fault-injection layer (FaultConfig, default disabled) — churn
+    # scenarios run the same arrival trace on a fleet that loses nodes
+    faults: FaultConfig = FaultConfig()
 
     def cluster(self) -> ClusterSpec:
         return ClusterSpec(num_machines=self.num_machines,
                            vms_per_machine=self.vms_per_machine,
-                           replication=self.replication)
+                           replication=self.replication,
+                           faults=self.faults)
 
     def jobs(self, spec: ClusterSpec, seed: int = 0) -> List[JobSpec]:
         rng = random.Random(seed)
@@ -108,6 +112,24 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
                      "long idle gaps (heartbeat re-arm stress)"),
         num_machines=100, vms_per_machine=2, num_jobs=100,
         burst_size=20, burst_gap=1500.0, sizes_gb=(0.5, 1.0, 2.0)),
+    Scenario(
+        name="fleet_100x2_churn",
+        description=("100 machines x 2 VMs, 120 jobs under node churn: "
+                     "crashes (MTBF 1800 s, MTTR 120 s), straggler bursts, "
+                     "and a 3:1 heterogeneous new/old machine mix — the "
+                     "fault-injection benchmark scenario"),
+        num_machines=100, vms_per_machine=2, num_jobs=120,
+        burst_size=30, burst_gap=240.0,
+        faults=FaultConfig(
+            enabled=True,
+            crash_mtbf=1800.0, crash_mttr=120.0,
+            rereplicate_after=60.0,
+            burst_rate=900.0, burst_duration=45.0, burst_slowdown=2.5,
+            machine_classes=(
+                MachineClass(name="new", weight=3),
+                MachineClass(name="old", weight=1, speed=1.4, fabric=1.25,
+                             mtbf_scale=0.5),
+            ))),
     Scenario(
         name="smoke_40x2",
         description="40 machines x 2 VMs, 40 jobs — CI-sized smoke scenario",

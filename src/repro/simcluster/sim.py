@@ -26,10 +26,24 @@ Engine notes (vs. the frozen seed engine in ``repro.simcluster._legacy``):
   submitted after an idle gap was never scheduled (deadlock), while a run
   with no jobs ticked forever.  Heartbeat chains now die when there is no
   active job, and every ``submit`` event revives dead chains.
+* **Fault injection** (``ClusterSpec.faults``, off by default — see
+  ``FaultConfig``): per-machine crash/restart processes with exponential
+  up/down times, loss + deterministic re-execution of the crashed node's
+  running tasks, re-replication of dead blocks after a grace window,
+  correlated straggler bursts, and heterogeneous machine classes.  Every
+  fault draw comes from dedicated per-machine RNG streams (seeded by the
+  sim seed + machine id only), so the disabled path consumes zero draws
+  from the duration RNG — decision parity with the legacy engine is
+  untouched — and an enabled run's fault schedule is reproducible
+  byte-for-byte per (config, seed).  Down nodes stop heartbeating (their
+  chain epoch is bumped, so stale chains die on pop) and restart re-arms
+  them; fault chains suspend while the cluster is idle and revive on
+  submit, exactly like heartbeat chains, so a drained run terminates.
 * ``events_processed`` counts processed events for benchmarking.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import math
 import random
@@ -49,6 +63,9 @@ class RunningTask:
     finish: float
     local: bool
     speculative: bool = False
+    # set by _kill_running when a crash kills this attempt: its pending
+    # finish event is void (the task may re-launch under the same live key)
+    dead: bool = False
 
 
 @dataclass
@@ -59,6 +76,11 @@ class SimResult:
     reconfig_stats: Dict[str, float] = field(default_factory=dict)
     speculative_launches: int = 0
     events_processed: int = 0
+    # fault injection (empty when FaultConfig is off): per-kind counters
+    # and the (time, kind, machine) event log — the log is the
+    # determinism pin's artifact (same config+seed => byte-identical)
+    fault_stats: Dict[str, int] = field(default_factory=dict)
+    fault_log: List[Tuple[float, str, int]] = field(default_factory=list)
 
     # -- derived metrics ----------------------------------------------------
     def completion_time(self, job_id: str) -> float:
@@ -149,6 +171,33 @@ class ClusterSim:
             scheduler, "reconfig", None) if scheduler.uses_reconfig else None
         if self.reconfig is not None:
             self.reconfig.validator = lambda vm: self.free_map(vm) > 0
+        # -- fault injection (FaultConfig; None = disabled, zero overhead) ---
+        self.faults = spec.faults if spec.faults.enabled else None
+        self.down_nodes: Set[int] = set()
+        self.fault_log: List[Tuple[float, str, int]] = []
+        self.fault_stats = {"crashes": 0, "restarts": 0, "tasks_lost": 0,
+                            "tasks_reexecuted": 0, "blocks_rereplicated": 0,
+                            "bursts": 0}
+        if self.faults is not None:
+            m = spec.num_machines
+            self.machine_up: List[bool] = [True] * m
+            # dedicated per-machine streams: fault schedules are a function
+            # of (config, seed, machine) and never touch self.rng, so the
+            # duration/straggler draw order is identical with faults off
+            self._crash_rng = [random.Random(f"{seed}:fault-crash:{i}")
+                               for i in range(m)]
+            self._burst_rng = [random.Random(f"{seed}:fault-burst:{i}")
+                               for i in range(m)]
+            self._machine_epoch: List[int] = [0] * m
+            self._node_epoch: List[int] = [0] * spec.num_nodes
+            self._burst_until: List[float] = [0.0] * m
+            # lost (non-speculative) tasks not yet relaunched — drained by
+            # _launch; the chaos audits assert it empties by sim end
+            self.lost_pending: Set[TaskId] = set()
+            # fault chains suspended because the cluster went idle; the
+            # next submit revives them (same liveness rule as heartbeats)
+            self._idle_crash_chains: Set[int] = set()
+            self._idle_burst_chains: Set[int] = set()
 
     # -- capacities ----------------------------------------------------------
     def map_capacity(self, node: int) -> int:
@@ -174,31 +223,64 @@ class ClusterSim:
         sigma = math.sqrt(math.log(1 + cv * cv))
         return self.rng.lognormvariate(-sigma * sigma / 2, sigma)
 
-    def task_duration(self, job: JobRuntime, task: TaskId, local: bool) -> float:
+    def task_duration(self, job: JobRuntime, task: TaskId, local: bool,
+                      node: Optional[int] = None, now: float = 0.0) -> float:
         prof = job.spec.profile
+        mc = None
+        if self.faults is not None and node is not None:
+            # heterogeneous machine class of the hosting node (the base
+            # class — all multipliers 1.0 — for a homogeneous fleet)
+            mc = self.faults.machine_class(self.spec.machine_of(node))
         if task.kind == TaskKind.MAP:
             base = prof.map_time
             if not local:
                 # remote_penalty_scale calibrates the fabric (1GbE -> 40GbE);
                 # at the default 1.0 the product is bit-identical to the
                 # seed's bare `prof.remote_penalty` (x * 1.0 == x in IEEE754)
-                base *= 1.0 + prof.remote_penalty * self.spec.remote_penalty_scale
+                penalty = prof.remote_penalty * self.spec.remote_penalty_scale
+                if mc is not None and mc.fabric != 1.0:
+                    penalty *= mc.fabric
+                base *= 1.0 + penalty
         else:
             # reduce = copy (one stream per mapper) + sort/reduce compute
             base = prof.reduce_time + job.spec.u_m * prof.shuffle_time_per_pair
+        if mc is not None and mc.speed != 1.0:
+            base *= mc.speed
         d = base * self._jitter(prof.time_cv)
         if self.rng.random() < self.straggler_prob:
             d *= self.straggler_factor
+        if (self.faults is not None and node is not None
+                and now < self._burst_until[self.spec.machine_of(node)]):
+            # correlated straggler episode on this machine
+            d *= self.faults.burst_slowdown
         return d
 
     # -- main loop --------------------------------------------------------------
     def run(self, jobs: List[JobSpec], until: float = 10_000_000.0) -> SimResult:
+        faults = self.faults
+        if faults is not None:
+            # re-replication mutates block placements in place: give this
+            # run its own placement lists so a caller-shared JobSpec (e.g.
+            # the fuzz harness running one scenario through two engines)
+            # never sees another run's mutations
+            jobs = [dataclasses.replace(
+                j, block_placement=[tuple(p) for p in j.block_placement])
+                for j in jobs]
         self._pending_submits = len(jobs)
         for job in jobs:
             self._push(job.submit_time, "submit", job)
         for node in range(self.spec.num_nodes):
             self._push(self.spec.heartbeat_interval * (1 + node / self.spec.num_nodes),
-                       "heartbeat", node)
+                       "heartbeat", node if faults is None else (node, 0))
+        if faults is not None:
+            if faults.crash_mtbf > 0:
+                for m in range(self.spec.num_machines):
+                    self._push(faults.crash_warmup + self._next_uptime(m),
+                               "crash", m)
+            if faults.burst_rate > 0:
+                for m in range(self.spec.num_machines):
+                    self._push(self._burst_rng[m].expovariate(
+                        1.0 / faults.burst_rate), "burst", m)
         now = 0.0
         while self.events:
             now, _, kind, data = heapq.heappop(self.events)
@@ -213,27 +295,56 @@ class ClusterSim:
                     # revive heartbeat chains that stopped while the cluster
                     # was idle — without this, a job submitted after an idle
                     # gap would never be scheduled (seed deadlock)
-                    for node in sorted(self._hb_dead):
-                        self._push(
-                            now + self.spec.heartbeat_interval
-                            * (1 + node / self.spec.num_nodes),
-                            "heartbeat", node)
-                    self._hb_dead.clear()
+                    if faults is None:
+                        for node in sorted(self._hb_dead):
+                            self._push(
+                                now + self.spec.heartbeat_interval
+                                * (1 + node / self.spec.num_nodes),
+                                "heartbeat", node)
+                        self._hb_dead.clear()
+                    else:
+                        # down nodes stay dead — their restart re-arms them
+                        for node in sorted(self._hb_dead - self.down_nodes):
+                            self._push(
+                                now + self.spec.heartbeat_interval
+                                * (1 + node / self.spec.num_nodes),
+                                "heartbeat", (node, self._node_epoch[node]))
+                            self._hb_dead.discard(node)
+                if faults is not None:
+                    self._revive_fault_chains(now)
             elif kind == "finish":
                 self._on_finish(data, now)
             elif kind == "plug":
                 self._on_plug_ready(now)
             elif kind == "heartbeat":
-                node = data
+                if faults is None:
+                    node = data
+                else:
+                    node, epoch = data
+                    if (epoch != self._node_epoch[node]
+                            or node in self.down_nodes):
+                        # stale chain (the node crashed since this beat was
+                        # armed) or currently-down node: the chain dies
+                        # here; the machine's restart arms a fresh one
+                        continue
                 self._heartbeat(node, now)
                 if self.sched.has_active_jobs() or (
                         not self.sched.jobs and self._pending_submits > 0):
                     self._push(now + self.spec.heartbeat_interval, "heartbeat",
-                               node)
+                               node if faults is None
+                               else (node, self._node_epoch[node]))
                 else:
                     # idle: let this chain die instead of ticking forever;
                     # the next submit revives it
                     self._hb_dead.add(node)
+            elif kind == "crash":
+                self._on_crash(data, now)
+            elif kind == "restart":
+                self._on_restart(data, now)
+            elif kind == "burst":
+                self._on_burst(data, now)
+            elif kind == "rereplicate":
+                self._on_rereplicate(data[0], data[1], now)
         result = SimResult(
             scheduler=self.sched.name,
             jobs=self.sched.jobs,
@@ -242,13 +353,20 @@ class ClusterSim:
             reconfig_stats=dict(self.reconfig.stats) if self.reconfig else {},
             speculative_launches=self.n_speculative,
             events_processed=self.events_processed,
+            fault_stats=dict(self.fault_stats) if faults is not None else {},
+            fault_log=list(self.fault_log),
         )
         return result
 
     # -- handlers -------------------------------------------------------------
     def _launch(self, launch: Launch, now: float, speculative: bool = False) -> None:
         job = self.sched.jobs[launch.task.job_id]
-        dur = self.task_duration(job, launch.task, launch.local)
+        dur = self.task_duration(job, launch.task, launch.local,
+                                 launch.node, now)
+        if (self.faults is not None and not speculative
+                and launch.task in self.lost_pending):
+            self.lost_pending.discard(launch.task)
+            self.fault_stats["tasks_reexecuted"] += 1
         rt = RunningTask(launch.task, launch.node, now, now + dur,
                          launch.local, speculative)
         if launch.task.kind == TaskKind.MAP:
@@ -269,8 +387,27 @@ class ClusterSim:
         self._push(rt.finish, "finish", rt)
 
     def _on_finish(self, rt: RunningTask, now: float) -> None:
+        if rt.dead:
+            # a crash killed this attempt: its finish is void.  The task
+            # may already be re-running under the same live key — without
+            # this check the stale finish would complete the task early
+            # and strand the re-execution's RunningTask in its slot.
+            # (A *cancelled* duplicate is the next check: its live key is
+            # gone.  The key-membership semantics below stay byte-exact
+            # with the frozen engine for every non-crash path.)
+            return
         if (rt.task, rt.speculative) not in self.live:
-            return                      # cancelled duplicate
+            # cancelled duplicate.  The frozen engine leaves a reconfig
+            # double-launch's losing attempt in its running list forever
+            # (a one-slot leak, bit-exactly mirrored while faults are
+            # off); under churn a leaked slot compounds with crash
+            # capacity loss, so the fault-aware engine frees it here.
+            if self.faults is not None:
+                lst = (self.map_running if rt.task.kind == TaskKind.MAP
+                       else self.red_running)[rt.node]
+                if rt in lst:
+                    lst.remove(rt)
+            return
         del self.live[(rt.task, rt.speculative)]
         lst = (self.map_running if rt.task.kind == TaskKind.MAP
                else self.red_running)[rt.node]
@@ -351,6 +488,151 @@ class ClusterSim:
             self._match_reconfig(now)   # pair fresh AQ entries immediately
         if self.speculative:
             self._maybe_speculate(node, now)
+
+    # -- fault injection (FaultConfig; handlers unreachable when off) ---------
+    def _fault_live(self) -> bool:
+        """Fault chains follow the heartbeat liveness rule: they tick only
+        while there is (or will be) work, so a drained run terminates."""
+        return self.sched.has_active_jobs() or self._pending_submits > 0
+
+    def _next_uptime(self, machine: int) -> float:
+        f = self.faults
+        mtbf = f.crash_mtbf * f.machine_class(machine).mtbf_scale
+        return self._crash_rng[machine].expovariate(1.0 / mtbf)
+
+    def _revive_fault_chains(self, now: float) -> None:
+        f = self.faults
+        for m in sorted(self._idle_crash_chains):
+            self._push(now + self._next_uptime(m), "crash", m)
+        self._idle_crash_chains.clear()
+        for m in sorted(self._idle_burst_chains):
+            self._push(now + self._burst_rng[m].expovariate(
+                1.0 / f.burst_rate), "burst", m)
+        self._idle_burst_chains.clear()
+
+    def _machine_nodes(self, machine: int) -> List[int]:
+        vpm = self.spec.vms_per_machine
+        return list(range(machine * vpm, (machine + 1) * vpm))
+
+    def _on_crash(self, machine: int, now: float) -> None:
+        f = self.faults
+        if not self._fault_live():
+            self._idle_crash_chains.add(machine)
+            return
+        self.machine_up[machine] = False
+        self.fault_stats["crashes"] += 1
+        self.fault_log.append((now, "crash", machine))
+        nodes = self._machine_nodes(machine)
+        self.down_nodes.update(nodes)
+        for v in nodes:
+            # bump the chain epoch: any pending heartbeat of this node is
+            # now stale and dies on pop (restart arms the next chain)
+            self._node_epoch[v] += 1
+        for v in nodes:
+            for rt in self.map_running[v] + self.red_running[v]:
+                self._kill_running(rt, now)
+            self.map_running[v].clear()
+            self.red_running[v].clear()
+        if self.reconfig is not None:
+            # cancelled AQ entries and aborted in-flight plugs: their tasks
+            # are still pending and re-enter normal scheduling
+            for task in self.reconfig.machine_down(machine, now):
+                self.sched.parked_task_crashed(task, now)
+        self.sched.node_down(nodes, now)
+        self._push(now + self._crash_rng[machine].expovariate(
+            1.0 / f.crash_mttr), "restart", machine)
+        self._push(now + f.rereplicate_after, "rereplicate",
+                   (machine, self._machine_epoch[machine]))
+
+    def _kill_running(self, rt: RunningTask, now: float) -> None:
+        """A crash killed this running task.  A speculative copy simply
+        dies (the original keeps running and may be re-speculated); losing
+        the original also kills any surviving speculative twin — the
+        attempt's lineage is re-executed from scratch — and hands the task
+        back to the scheduler (``task_lost`` restores the pending state)."""
+        key = (rt.task, rt.speculative)
+        if key not in self.live:
+            return                        # already resolved this instant
+        del self.live[key]
+        rt.dead = True                    # voids the pending finish event
+        self.fault_stats["tasks_lost"] += 1
+        if rt.speculative:
+            self.spec_launched.discard(rt.task)
+            return
+        twin = self.live.pop((rt.task, True), None)
+        if twin is not None:
+            twin.dead = True
+            tl = (self.map_running if rt.task.kind == TaskKind.MAP
+                  else self.red_running)[twin.node]
+            if twin in tl:
+                tl.remove(twin)
+            self.spec_launched.discard(rt.task)
+        self.lost_pending.add(rt.task)
+        self.sched.task_lost(rt.task, rt.node, now)
+
+    def _on_restart(self, machine: int, now: float) -> None:
+        f = self.faults
+        self.machine_up[machine] = True
+        self._machine_epoch[machine] += 1
+        self.fault_stats["restarts"] += 1
+        self.fault_log.append((now, "restart", machine))
+        nodes = self._machine_nodes(machine)
+        self.down_nodes.difference_update(nodes)
+        if self.reconfig is not None:
+            self.reconfig.machine_restarted(machine, now)
+        self.sched.node_up(nodes, now)
+        for v in nodes:
+            # fresh heartbeat chain (the crash staled the old one); if the
+            # cluster is idle the chain dies into _hb_dead as usual
+            self._hb_dead.discard(v)
+            self._push(now + self.spec.heartbeat_interval
+                       * (1 + v / self.spec.num_nodes),
+                       "heartbeat", (v, self._node_epoch[v]))
+        if self._fault_live():
+            self._push(now + self._next_uptime(machine), "crash", machine)
+        else:
+            self._idle_crash_chains.add(machine)
+
+    def _on_burst(self, machine: int, now: float) -> None:
+        f = self.faults
+        if not self._fault_live():
+            self._idle_burst_chains.add(machine)
+            return
+        self._burst_until[machine] = now + f.burst_duration
+        self.fault_stats["bursts"] += 1
+        self.fault_log.append((now, "burst", machine))
+        self._push(now + self._burst_rng[machine].expovariate(
+            1.0 / f.burst_rate), "burst", machine)
+
+    def _on_rereplicate(self, machine: int, epoch: int, now: float) -> None:
+        """Grace window elapsed with the machine still down: every pending
+        map block whose replicas are *all* on crashed nodes gets one new
+        replica (restored from the durable store) on a surviving node —
+        deterministically the nearest live node id after the block's
+        primary — restoring schedulable locality.  Blocks with a live
+        replica are left alone (the scheduler already reaches them)."""
+        if self.machine_up[machine] or self._machine_epoch[machine] != epoch:
+            return                        # restarted before the window
+        n = self.spec.num_nodes
+        down = self.down_nodes
+        count = 0
+        for job in list(self.sched.active.values()):
+            placement = job.spec.block_placement
+            for idx in sorted(job.pending_map):
+                pl = placement[idx]
+                if not pl or any(v not in down for v in pl):
+                    continue
+                new = next((c for k in range(1, n)
+                            if (c := (pl[0] + k) % n) not in down), None)
+                if new is None:
+                    continue              # whole cluster down
+                placement[idx] = pl + (new,)
+                heapq.heappush(job._local_heaps.setdefault(new, []), idx)
+                self.sched.local_pending_count[new] += 1
+                count += 1
+        if count:
+            self.fault_stats["blocks_rereplicated"] += count
+            self.fault_log.append((now, "rereplicate", machine))
 
     # -- incremental speculative execution ------------------------------------
     def _spec_push_wake(self, jid: str, wake: float) -> None:

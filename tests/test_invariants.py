@@ -42,21 +42,41 @@ Adaptive-mode invariants (AdaptiveConfig enabled) extend the audit:
 * **map_open_jobs / overdue** — the map-phase-open counter and the lazy
   overdue set equal from-scratch recomputations.
 
+Fault-path invariants (FaultConfig enabled) extend the audit again:
+
+* **no work on down nodes** — a launch targeting a crashed node raises
+  immediately; at every heartbeat the down nodes' running lists are empty
+  and no live attempt sits on a down node.
+* **lost-task ledger** — a crash-killed task is never simultaneously in
+  ``lost_pending`` and live, and stays pending (or completed by an
+  already-resolved twin) until its re-execution launches.
+* **re-execution is not a duplicate** — the launch-once audit treats a
+  killed attempt's re-launch as a fresh primary launch, while still
+  flagging any other duplicate.
+* all the counter recounts above run unchanged on fault runs — crashes,
+  re-pends, re-replication and parked-task cancellation must keep every
+  incremental view recount-exact, including ``map_open_jobs`` when a
+  machine crash kills a job's running maps in one sweep (injected-bug
+  pin below).
+
 The final tests inject off-by-ones (pending-map counter, locality counter,
-rq_depth) and assert the recount catches them — the detection property
-itself is pinned.
+rq_depth, map_open_jobs on mass task loss) and assert the recount catches
+them — the detection property itself is pinned.
 """
 import bisect
+import dataclasses
 import math
 import random
 
 import pytest
 
 from repro.core.baselines import FairScheduler
+from repro.core.policies import PolicySpec
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.scheduler import CompletionTimeScheduler, SchedulerBase
+from repro.core.types import TaskKind
 from repro.simcluster.sim import ClusterSim
-from test_parity_fuzz import build_scenario, _schedulers
+from test_parity_fuzz import build_scenario, _schedulers, fuzz_fault_config
 
 N_RUNS = 12                       # random scenarios per scheduler-agnostic run
 
@@ -76,6 +96,7 @@ class InvariantCheckedSim(ClusterSim):
         self._ever_parked = set()
         self.heartbeats_checked = 0
         self.parks_audited = 0
+        self.fault_kills = 0
         if self.reconfig is not None:
             self._instrument_reconfig()
 
@@ -104,6 +125,17 @@ class InvariantCheckedSim(ClusterSim):
             real_free(vm, now)
             self._free_times[rc.spec.machine_of(vm)].append(now)
         rc.observe_core_free = observe_core_free
+
+        real_restart = rc.machine_restarted
+
+        def machine_restarted(machine, now):
+            # the restart resets every pressure signal (pre-crash samples
+            # must not poison the fresh machine) — the from-scratch
+            # recomputation starts over from the same point
+            real_restart(machine, now)
+            self._offer_times[machine].clear()
+            self._free_times[machine].clear()
+        rc.machine_restarted = machine_restarted
 
         real_park = rc.park_task
 
@@ -135,6 +167,9 @@ class InvariantCheckedSim(ClusterSim):
     # -- launch-once + slot caps ------------------------------------------
     def _launch(self, launch, now, speculative=False):
         task = launch.task
+        if self.faults is not None and launch.node in self.down_nodes:
+            raise InvariantViolation(
+                f"launch of {task} on down node {launch.node}")
         if speculative:
             if task in self._spec_seen:
                 raise InvariantViolation(f"speculative duplicate: {task}")
@@ -165,6 +200,43 @@ class InvariantCheckedSim(ClusterSim):
             raise InvariantViolation(
                 f"node {node}: {len(self.red_running[node])} running reduces "
                 f"> {self.spec.base_reduce_slots} slots")
+
+    # -- fault-path bookkeeping -------------------------------------------
+    def _kill_running(self, rt, now):
+        was_live = (rt.task, rt.speculative) in self.live
+        super()._kill_running(rt, now)
+        if not was_live:
+            return
+        self.fault_kills += 1
+        # re-executing a killed attempt is a fresh launch, not a duplicate:
+        # forget the dead lineage so the launch-once audit accepts exactly
+        # one new primary (and one new speculative copy) for the task
+        self._spec_seen.discard(rt.task)
+        if not rt.speculative:
+            self._primary_seen.discard(rt.task)
+            self._reconfig_relaunches.discard(rt.task)
+
+    def _check_fault_state(self):
+        for v in sorted(self.down_nodes):
+            if self.map_running[v] or self.red_running[v]:
+                raise InvariantViolation(
+                    f"down node {v} still has running tasks")
+        for rt in self.live.values():
+            if rt.node in self.down_nodes:
+                raise InvariantViolation(
+                    f"live attempt {rt.task} on down node {rt.node}")
+        for task in self.lost_pending:
+            if (task, False) in self.live or (task, True) in self.live:
+                raise InvariantViolation(
+                    f"lost task {task} is simultaneously live")
+            job = self.sched.jobs[task.job_id]
+            pend = (job.pending_map if task.kind == TaskKind.MAP
+                    else job.pending_reduce)
+            done = (job.completed_map if task.kind == TaskKind.MAP
+                    else job.completed_reduce)
+            if task.index not in pend and task.index not in done:
+                raise InvariantViolation(
+                    f"lost task {task} neither pending nor completed")
 
     # -- per-heartbeat recounts -------------------------------------------
     def _heartbeat(self, node, now):
@@ -219,6 +291,8 @@ class InvariantCheckedSim(ClusterSim):
             raise InvariantViolation(
                 f"map_open_jobs={sched.map_open_jobs} != recount "
                 f"{expect_open}")
+        if self.faults is not None:
+            self._check_fault_state()
         if isinstance(sched, CompletionTimeScheduler):
             expect_edf = sorted((j.absolute_deadline, j.seq, j.spec.job_id)
                                 for j in sched.active.values())
@@ -415,3 +489,85 @@ def test_injected_rq_depth_bug_is_caught(monkeypatch):
         for k in range(40):                    # scan until a scenario parks
             run_checked(909000 + k, "proposed")
     assert state["calls"] >= 2
+
+
+# -- fault-path invariants ----------------------------------------------------
+
+FAULT_POLICIES = ("proposed", "adaptive", "adaptive_ra", "delay",
+                  "fair", "fifo")
+
+
+def run_checked_faulty(scenario_seed: int, scheduler: str):
+    """A random scenario re-run with crashes/bursts/heterogeneity ON —
+    the full per-heartbeat audit plus the fault-state checks."""
+    sc = build_scenario(random.Random(scenario_seed))
+    sc["spec"] = dataclasses.replace(
+        sc["spec"],
+        faults=fuzz_fault_config(random.Random(scenario_seed * 31 + 7),
+                                 enabled=True))
+    sched = PolicySpec(scheduler).build(sc["spec"])
+    sim = InvariantCheckedSim(
+        sc["spec"], sched, seed=sc["sim_seed"],
+        straggler_prob=sc["straggler_prob"],
+        straggler_factor=sc["straggler_factor"],
+        speculative=sc["speculative"],
+        speculation_threshold=sc["speculation_threshold"])
+    result = sim.run(sc["jobs"])
+    assert sim.heartbeats_checked > 0
+    return sim, result
+
+
+@pytest.mark.parametrize("scheduler", FAULT_POLICIES)
+def test_fault_invariants_hold_on_random_runs(scheduler):
+    """Node churn must keep every incremental view recount-exact: counters,
+    flags, orders, vCPU conservation, plus the down-node / lost-task audits.
+    Across the seeds each policy must actually observe kills (the fault
+    paths ran) and every job must still finish (re-execution liveness)."""
+    kills = 0
+    for k in range(6):
+        sim, result = run_checked_faulty(626200 + k, scheduler)
+        kills += sim.fault_kills
+        assert all(j.finish_time is not None for j in result.jobs.values())
+        assert not sim.lost_pending and not sim.live
+    assert kills > 0
+
+
+def test_down_node_launch_audit_fires():
+    """The no-work-on-down-nodes audit itself: force a node down and the
+    next launch attempt on it must raise."""
+    from repro.simcluster.sim import Launch
+    sc = build_scenario(random.Random(626299))
+    sc["spec"] = dataclasses.replace(
+        sc["spec"], faults=fuzz_fault_config(random.Random(1), enabled=True))
+    sched = PolicySpec("fifo").build(sc["spec"])
+    sim = InvariantCheckedSim(sc["spec"], sched, seed=0)
+    job = sc["jobs"][0]
+    sim.sched.job_added(job, 0.0)
+    sim.down_nodes.add(0)
+    from repro.core.types import TaskId
+    task = TaskId(job_id=job.job_id, kind=TaskKind.MAP, index=0)
+    with pytest.raises(InvariantViolation, match="down node"):
+        sim._launch(Launch(task, 0, local=True), 0.0)
+
+
+def test_injected_map_open_jobs_bug_on_mass_loss_is_caught(monkeypatch):
+    """Satellite pin: when a machine crash kills a job's running maps in one
+    sweep, ``map_open_jobs`` must *not* change (the phase was open before
+    the crash and the re-pended maps keep it open).  Inject the plausible
+    off-by-one — treating 'no running maps left' as the phase closing —
+    and the per-heartbeat recount must flag it."""
+    real_lost = SchedulerBase.task_lost
+    state = {"mass_losses": 0}
+
+    def buggy_lost(self, task, node, now):
+        real_lost(self, task, node, now)
+        job = self.jobs[task.job_id]
+        if (task.kind == TaskKind.MAP and not job.running_map
+                and not job.map_done and state["mass_losses"] == 0):
+            state["mass_losses"] += 1
+            self.map_open_jobs -= 1          # the injected misaccounting
+    monkeypatch.setattr(SchedulerBase, "task_lost", buggy_lost)
+    with pytest.raises(InvariantViolation, match="map_open_jobs"):
+        for k in range(40):       # scan until a crash wipes a job's maps
+            run_checked_faulty(626200 + k, "proposed")
+    assert state["mass_losses"] == 1

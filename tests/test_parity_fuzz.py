@@ -31,6 +31,15 @@ adaptive-ON differential suite (``REPRO_ADAPTIVE_FUZZ_SCENARIOS``, default
 every job finishes, every task completes exactly once, and the park ledger
 balances — parked = matched + expired + (stale AQ entries whose task
 already completed), i.e. adaptive parking never strands a task.
+
+The **FaultConfig knobs are fuzzed the same two ways**: every parity
+scenario carries a disabled-but-wild fault config (crash/burst/
+heterogeneity settings must be inert while ``enabled=False``), and a
+fault-ON chaos suite (``REPRO_FAULT_FUZZ_SCENARIOS``, default 60) runs
+seeded crash/churn scenarios across all six policy columns, pinning
+liveness: the event loop drains (no deadlock, no event-queue leak), every
+job finishes, every crash-lost primary task is re-executed, and nothing is
+left running on a down node.
 """
 import dataclasses
 import os
@@ -39,7 +48,8 @@ import random
 import pytest
 
 from repro.core.policies import PolicyError, PolicySpec
-from repro.core.types import AdaptiveConfig, ClusterSpec
+from repro.core.types import (AdaptiveConfig, ClusterSpec, FaultConfig,
+                              MachineClass)
 from repro.simcluster._legacy import LegacyClusterSim
 from repro.simcluster.sim import ClusterSim
 from repro.simcluster.workloads import WORKLOADS, default_deadline, make_job
@@ -52,6 +62,7 @@ except ImportError:                     # pragma: no cover - env-dependent
 
 N_SCENARIOS = int(os.environ.get("REPRO_FUZZ_SCENARIOS", "200"))
 N_ADAPTIVE = int(os.environ.get("REPRO_ADAPTIVE_FUZZ_SCENARIOS", "60"))
+N_FAULT = int(os.environ.get("REPRO_FAULT_FUZZ_SCENARIOS", "60"))
 BASE_SEED = int(os.environ.get("REPRO_FUZZ_SEED", "0"))
 CHUNKS = 8
 SUBMIT_WINDOW_S = 12.0                  # see module docstring
@@ -87,6 +98,33 @@ def fuzz_adaptive_config(rng: random.Random,
     )
 
 
+def fuzz_fault_config(rng: random.Random,
+                      enabled: bool = False) -> FaultConfig:
+    """Random-but-valid FaultConfig.  ``enabled=False`` for the parity
+    suite (wild crash/burst/heterogeneity knobs must be inert while
+    disabled); ``enabled=True`` draws MTBFs short enough that small fuzz
+    scenarios actually crash."""
+    classes = ()
+    if rng.random() < 0.5:
+        classes = (MachineClass(name="new", weight=rng.randint(1, 3)),
+                   MachineClass(name="old", weight=1,
+                                speed=round(rng.uniform(1.0, 1.8), 2),
+                                fabric=round(rng.uniform(0.8, 1.5), 2),
+                                mtbf_scale=round(rng.uniform(0.3, 1.0), 2)))
+    return FaultConfig(
+        enabled=enabled,
+        crash_mtbf=round(rng.uniform(120.0, 900.0), 1),
+        crash_mttr=round(rng.uniform(20.0, 120.0), 1),
+        crash_warmup=round(rng.uniform(0.0, 30.0), 1),
+        rereplicate_after=round(rng.uniform(10.0, 60.0), 1),
+        burst_rate=round(rng.uniform(100.0, 600.0), 1)
+        if rng.random() < 0.5 else 0.0,
+        burst_duration=round(rng.uniform(10.0, 60.0), 1),
+        burst_slowdown=round(rng.uniform(1.5, 4.0), 2),
+        machine_classes=classes,
+    )
+
+
 def build_scenario(rng: random.Random):
     """One random scenario: cluster shape, job mix, sim + scheduler knobs.
     Everything is drawn from ``rng``, so a scenario is reproducible from its
@@ -96,7 +134,8 @@ def build_scenario(rng: random.Random):
     nodes = machines * vms
     spec = ClusterSpec(num_machines=machines, vms_per_machine=vms,
                        replication=rng.randint(1, min(2, nodes)),
-                       adaptive=fuzz_adaptive_config(rng))
+                       adaptive=fuzz_adaptive_config(rng),
+                       faults=fuzz_fault_config(rng))
     n_jobs = rng.randint(1, 6)
     submits = sorted(round(rng.uniform(0.0, SUBMIT_WINDOW_S), 2)
                      for _ in range(n_jobs))
@@ -292,6 +331,97 @@ def _run_proposed(sc):
                       speculative=sc["speculative"],
                       speculation_threshold=sc["speculation_threshold"]
                       ).run([j for j in sc["jobs"]])
+
+
+# ---------------------------------------------------------------------------
+# fault-ON chaos suite: churn liveness, not parity
+# ---------------------------------------------------------------------------
+
+FAULT_POLICIES = ("proposed", "adaptive", "adaptive_ra", "delay",
+                  "fair", "fifo")
+
+
+def run_faulty(sc, policy: str):
+    """Run the scenario on the new engine with an enabled fuzzed
+    FaultConfig and return (sim, result)."""
+    rng = random.Random(f"fault-knobs:{sc['sim_seed']}")
+    spec = dataclasses.replace(sc["spec"],
+                               faults=fuzz_fault_config(rng, enabled=True))
+    sched = PolicySpec(policy).build(spec)
+    sim = ClusterSim(spec, sched, seed=sc["sim_seed"],
+                     straggler_prob=sc["straggler_prob"],
+                     straggler_factor=sc["straggler_factor"],
+                     speculative=sc["speculative"],
+                     speculation_threshold=sc["speculation_threshold"])
+    return sim, sim.run([j for j in sc["jobs"]])
+
+
+def assert_fault_liveness(sc, policy: str):
+    """Churn must degrade, never wedge: the event loop drains, every job
+    finishes with every task completed exactly once, every crash-lost
+    primary is re-executed, and no work is left behind on a down node."""
+    sim, res = run_faulty(sc, policy)
+    assert not sim.events, "event-queue leak: loop exited with events queued"
+    assert not sim.live, "tasks still marked running after drain"
+    assert not sim.lost_pending, (
+        f"crash-lost tasks never re-executed: {sorted(sim.lost_pending)}")
+    for node in range(sim.spec.num_nodes):
+        assert not sim.map_running[node] and not sim.red_running[node]
+    for jid, job in res.jobs.items():
+        assert job.finish_time is not None, f"{jid} never finished"
+        assert len(job.completed_map) == job.spec.u_m, jid
+        assert len(job.completed_reduce) == job.spec.v_r, jid
+    st = res.fault_stats
+    assert st["crashes"] == sum(
+        1 for _, kind, _ in res.fault_log if kind == "crash")
+    # every loss is either re-executed or was a dead speculative copy
+    assert st["tasks_reexecuted"] <= st["tasks_lost"]
+    return st
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("chunk", range(CHUNKS))
+def test_fuzz_fault_liveness(chunk):
+    """Fault-ON sweep over REPRO_FAULT_FUZZ_SCENARIOS seeded crash/churn
+    scenarios, policy column rotated per scenario; the chunk must observe
+    crashes (the knobs are drawn so churn actually happens)."""
+    per_chunk = (N_FAULT + CHUNKS - 1) // CHUNKS
+    start = chunk * per_chunk
+    crashes = 0
+    for k in range(start, min(start + per_chunk, N_FAULT)):
+        scenario_seed = BASE_SEED * 13_000_003 + k
+        sc = build_scenario(random.Random(scenario_seed))
+        policy = FAULT_POLICIES[k % len(FAULT_POLICIES)]
+        try:
+            st = assert_fault_liveness(sc, policy)
+        except AssertionError as e:
+            raise AssertionError(
+                f"fault liveness broken for scenario seed={scenario_seed} "
+                f"({policy}, {sc['spec'].num_machines}x"
+                f"{sc['spec'].vms_per_machine}, {len(sc['jobs'])} jobs): {e}"
+            ) from e
+        crashes += st["crashes"]
+    assert crashes > 0, "chaos suite chunk observed zero crashes"
+
+
+@pytest.mark.fuzz
+def test_fault_off_is_default_and_inert():
+    """FaultConfig defaults to off, and a disabled config with wild knobs
+    produces the identical run as the default config — the fault analogue
+    of the adaptive inertness pin below."""
+    assert FaultConfig().enabled is False
+    sc = build_scenario(random.Random(31337))
+    sc["scheduler"] = "proposed"
+    assert sc["spec"].faults != FaultConfig()    # wild (disabled) knobs
+    res_knobs = _run_proposed(sc)
+    sc_plain = dict(sc)
+    sc_plain["spec"] = dataclasses.replace(sc["spec"], faults=FaultConfig())
+    sc_plain["jobs"] = [j for j in sc["jobs"]]
+    res_plain = _run_proposed(sc_plain)
+    assert res_knobs.makespan == res_plain.makespan
+    assert {j: r.finish_time for j, r in res_knobs.jobs.items()} \
+        == {j: r.finish_time for j, r in res_plain.jobs.items()}
+    assert res_knobs.fault_stats == {} and res_knobs.fault_log == []
 
 
 @pytest.mark.fuzz

@@ -163,6 +163,75 @@ def test_replication_axis_extends_grid_and_reuses_cache(tmp_path):
                     replications=(0,), cache_dir=tmp_path / "cache")
 
 
+def test_fault_axis_extends_grid_and_reuses_cache(tmp_path):
+    n = len(SCHEDULERS)
+    base = run_regimes(presets=("mix_small",), shapes=("20x2",),
+                       seeds=(0,), cache_dir=tmp_path / "cache", n_boot=100)
+    assert base.simulated == n
+    churn = run_regimes(presets=("mix_small",), shapes=("20x2",),
+                        seeds=(0,), faults=("churn_hi",),
+                        cache_dir=tmp_path / "cache", n_boot=100)
+    # base cells reused; only the churn cell simulates (fault cells keep
+    # their own cache keys: FaultConfig lands in the cluster descriptor)
+    assert churn.simulated == n and churn.cached == n
+    assert [c.faults for c in churn.cells] == ["none", "churn_hi"]
+    assert churn.fault_profiles == ("none", "churn_hi")
+    cell = churn.cell("mix_small", "20x2", faults="churn_hi")
+    assert cell.faults == "churn_hi" and cell.fabric == BASE_FABRIC
+    assert cell.to_dict()["faults"] == "churn_hi"
+    with pytest.raises(KeyError):
+        churn.cell("mix_small", "20x2", faults="churn_lo")
+    with pytest.raises(ValueError, match="unknown fault profile"):
+        run_regimes(presets=("mix_small",), shapes=("20x2",), seeds=(0,),
+                    faults=("meteor",), cache_dir=tmp_path / "cache")
+    # renders with the faults column
+    assert "| faults |" in churn.to_markdown()
+
+
+def test_fault_profiles_cover_acceptance_axes():
+    """The atlas faults axis spans a crash-rate axis and a heterogeneity
+    axis, and the base profile is the disabled default (so base cells'
+    cache hashes are untouched by the fault layer)."""
+    from repro.core.types import FaultConfig
+    from repro.experiments.regimes import (BASE_FAULTS, FAULT_PROFILES,
+                                           FAULT_SHAPES, FULL_FAULTS)
+    assert FAULT_PROFILES[BASE_FAULTS] == FaultConfig()
+    assert len(FULL_FAULTS) >= 2
+    rates = {FAULT_PROFILES[f].crash_mtbf
+             for f in FULL_FAULTS if not FAULT_PROFILES[f].machine_classes}
+    assert len(rates) >= 2                      # crash-rate axis
+    assert any(FAULT_PROFILES[f].machine_classes
+               for f in FULL_FAULTS)            # heterogeneity axis
+    assert set(FAULT_SHAPES) <= set(FULL_SHAPES)
+    spec = regime_spec("mix_small", "20x2", seeds=(0,), faults="churn_hi")
+    assert spec.clusters[0].faults == FAULT_PROFILES["churn_hi"]
+    assert spec.name.endswith("-churn_hi")
+
+
+def test_swim_trace_column(tmp_path):
+    """The SWIM-derived trace is a first-class atlas column: committed
+    fixture, importable, cache-reusing, and rendered like any preset."""
+    from repro.experiments.regimes import SWIM_TRACES, scaled_jobs
+    from repro.simcluster.traces import Trace
+    path = SWIM_TRACES["swim_fb"]
+    assert path.exists()
+    trace = Trace.load(path)
+    assert len(trace.jobs) >= 50
+    assert scaled_jobs("swim_fb", 20) == len(trace.jobs)
+    n = len(SCHEDULERS)
+    report = run_regimes(presets=(), shapes=("20x2",), seeds=(0,),
+                         swim=("swim_fb",), cache_dir=tmp_path / "cache",
+                         n_boot=100)
+    assert report.simulated == n
+    assert report.swim == ("swim_fb",)
+    cell = report.cell("swim_fb", "20x2")
+    assert cell.verdict() in ("win", "loss", "tie")
+    assert "swim_fb" in report.to_markdown()
+    with pytest.raises(ValueError, match="unknown SWIM trace"):
+        run_regimes(presets=(), shapes=("20x2",), seeds=(0,),
+                    swim=("swim_yahoo",), cache_dir=tmp_path / "cache")
+
+
 # -- the flipped loss cell must not silently regress -------------------------
 
 @pytest.fixture(scope="module")

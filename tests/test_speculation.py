@@ -43,7 +43,7 @@ class FixedDurationSim(ClusterSim):
         self._straggled = False
         self.duration_log = []   # (task, speculative-launch?, duration)
 
-    def task_duration(self, job, task, local):
+    def task_duration(self, job, task, local, node=None, now=0.0):
         if (task.kind == TaskKind.MAP and task.index == 0
                 and not self._straggled):
             self._straggled = True
