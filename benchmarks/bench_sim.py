@@ -105,12 +105,33 @@ def bench_paper_cluster(seed: int = 3, commit: str = "unknown") -> dict:
 
 
 def bench_scenario(name: str, *, seed: int = 0, engines=("indexed",),
-                   commit: str = "unknown") -> dict:
+                   commit: str = "unknown", traced: bool = False) -> dict:
     out: dict = {"description": SCENARIOS[name].description}
     for engine in engines:
         t0 = time.perf_counter()
         res = run_scenario(name, engine=engine, seed=seed)
         out[engine] = _summarize(res, time.perf_counter() - t0, engine, commit)
+    if traced:
+        # same scenario with the decision-trace bus enabled: measures the
+        # observer overhead and live-checks the bit-exactness contract.
+        # Best-of-3 because single-shot wall clocks on shared machines
+        # swing far more than the overhead being measured.
+        best_wall, res = None, None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            r = run_scenario(name, engine="indexed", seed=seed, tracing=True)
+            wall = time.perf_counter() - t0
+            if best_wall is None or wall < best_wall:
+                best_wall, res = wall, r
+        entry = _summarize(res, best_wall, "indexed", commit)
+        entry["engine_id"] += "+trace-bus"
+        entry["trace_events"] = res.trace.total
+        out["indexed_traced"] = entry
+        out["traced_parity"] = (entry["sim_makespan_s"]
+                                == out["indexed"]["sim_makespan_s"])
+        out["trace_overhead_pct"] = round(
+            100.0 * (1.0 - entry["events_per_sec"]
+                     / out["indexed"]["events_per_sec"]), 1)
     if "legacy" in out and "indexed" in out:
         out["speedup"] = round(out["legacy"]["wall_time_s"]
                                / out["indexed"]["wall_time_s"], 2)
@@ -125,6 +146,10 @@ def main(argv=None) -> int:
                     help="<60s subset for per-PR regression tracking")
     ap.add_argument("--scenarios", nargs="+", default=None,
                     help="explicit scenario names (indexed engine only)")
+    ap.add_argument("--traced", action="store_true",
+                    help="also run each scenario with the decision-trace "
+                         "bus enabled: records indexed_traced events/sec, "
+                         "the overhead %% and a traced-parity check")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", type=Path, default=REPO_ROOT / "BENCH_sim.json")
     args = ap.parse_args(argv)
@@ -141,9 +166,11 @@ def main(argv=None) -> int:
             ap.error(f"unknown scenario(s) {unknown}; "
                      f"available: {', '.join(sorted(SCENARIOS))}")
         for name in args.scenarios:
-            print(f"[bench] {name} (indexed) ...", flush=True)
+            print(f"[bench] {name} (indexed"
+                  + (" + traced" if args.traced else "") + ") ...",
+                  flush=True)
             results["scenarios"][name] = bench_scenario(
-                name, seed=args.seed, commit=commit)
+                name, seed=args.seed, commit=commit, traced=args.traced)
     else:
         print("[bench] paper cluster (indexed + legacy) ...", flush=True)
         results["scenarios"]["paper_20x2"] = bench_paper_cluster(commit=commit)
@@ -153,10 +180,12 @@ def main(argv=None) -> int:
         if args.quick:
             print("[bench] fleet_100x2_sustained (indexed) ...", flush=True)
             results["scenarios"]["fleet_100x2_sustained"] = bench_scenario(
-                "fleet_100x2_sustained", seed=args.seed, commit=commit)
+                "fleet_100x2_sustained", seed=args.seed, commit=commit,
+                traced=args.traced)
             print("[bench] fleet_100x2_churn (indexed) ...", flush=True)
             results["scenarios"]["fleet_100x2_churn"] = bench_scenario(
-                "fleet_100x2_churn", seed=args.seed, commit=commit)
+                "fleet_100x2_churn", seed=args.seed, commit=commit,
+                traced=args.traced)
         else:
             # the headline comparison: >=100 machines, >=100 jobs, both
             # engines.  The arrival trace is gap-free so the seed engine's
@@ -165,7 +194,8 @@ def main(argv=None) -> int:
                   "the legacy run takes minutes) ...", flush=True)
             results["scenarios"]["fleet_100x2_sustained"] = bench_scenario(
                 "fleet_100x2_sustained", seed=args.seed,
-                engines=("indexed", "legacy"), commit=commit)
+                engines=("indexed", "legacy"), commit=commit,
+                traced=args.traced)
             for name in ("fleet_100x2", "fleet_200x2", "fleet_200x4",
                          "fleet_400x2", "burst_idle_gap"):
                 print(f"[bench] {name} (indexed; impossible on the seed "
@@ -188,6 +218,10 @@ def main(argv=None) -> int:
                      f"{r['indexed']['events_per_sec']} ev/s")
         if "speedup" in r:
             line += f", speedup {r['speedup']}x, parity={r['parity']}"
+        if "indexed_traced" in r:
+            line += (f", traced {r['indexed_traced']['events_per_sec']} ev/s "
+                     f"({r['trace_overhead_pct']:+.1f}% overhead, "
+                     f"traced_parity={r['traced_parity']})")
         print(line)
     return 0
 

@@ -5,6 +5,7 @@
 #   scripts/check.sh            # full gate
 #   SKIP_TESTS=1 scripts/check.sh   # bench regression check only
 #   BENCH_TOL=0.5 scripts/check.sh  # allowed fractional events/sec drop
+#   TRACE_TOL=0.1 scripts/check.sh  # allowed enabled-tracing overhead
 #
 # The tolerance is deliberately loose (default 0.5: fail only when a
 # scenario's indexed events/sec drops below half the committed number) —
@@ -17,6 +18,7 @@ cd "$REPO_ROOT"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BENCH_TOL="${BENCH_TOL:-0.5}"
+TRACE_TOL="${TRACE_TOL:-0.10}"
 QUICK_OUT="$(mktemp /tmp/bench_quick.XXXXXX.json)"
 trap 'rm -f "$QUICK_OUT"' EXIT
 
@@ -56,6 +58,83 @@ print(f"  crashes={res.fault_stats['crashes']} "
       f"reexecuted={res.fault_stats['tasks_reexecuted']} "
       f"bursts={res.fault_stats['bursts']} — all "
       f"{len(res.jobs)} jobs finished; log byte-reproducible")
+PY
+
+echo "== trace smoke (traced churn run byte-reproducible; explain exits 0) =="
+python - <<'PY'
+from repro.simcluster.largescale import run_scenario
+
+plain = run_scenario("fleet_100x2_churn", scheduler="proposed", seed=0)
+traced = run_scenario("fleet_100x2_churn", scheduler="proposed", seed=0,
+                      tracing=True)
+assert traced.makespan == plain.makespan, \
+    "tracing changed the schedule under churn"
+assert traced.fault_log == plain.fault_log, \
+    "tracing changed the fault schedule"
+again = run_scenario("fleet_100x2_churn", scheduler="proposed", seed=0,
+                     tracing=True)
+assert again.trace.to_jsonl() == traced.trace.to_jsonl(), \
+    "trace not byte-reproducible across identical runs"
+print(f"  {traced.trace.total} events, JSONL byte-identical across runs, "
+      f"makespan/fault_log unchanged vs untraced")
+PY
+EXPLAIN_CACHE="$(mktemp -d /tmp/explain_cache.XXXXXX)"
+python -m repro.experiments explain saturated 20x2 \
+    --cache "$EXPLAIN_CACHE" --no-store > /dev/null
+rm -rf "$EXPLAIN_CACHE"
+echo "  explain verb exited 0"
+
+echo "== enabled-tracing overhead bound (tol ${TRACE_TOL}) =="
+python - "$TRACE_TOL" <<'PY'
+import json, sys, time
+from pathlib import Path
+from repro.simcluster.largescale import run_scenario
+
+tol = float(sys.argv[1])
+
+# Paired CPU-time reps: each pair runs untraced then traced back-to-back
+# and records the traced/untraced ratio.  Single measurements on shared
+# CI machines swing far more (±15-25%) than the ~10% overhead being
+# bounded, so the gate passes if the *cleanest* of five pairs is within
+# tolerance — noise is symmetric, so a genuine regression (an allocation
+# or stringification landing back on the launch hot path) pushes every
+# pair over the bar, while honest ~10% overhead always yields at least
+# one clean pair.
+def timed(**kw):
+    c0 = time.process_time()
+    r = run_scenario("fleet_100x2_sustained", seed=0, **kw)
+    return time.process_time() - c0, r
+
+overheads = []
+for _ in range(5):
+    cpu_u, plain = timed()
+    cpu_t, traced = timed(tracing=True)
+    assert traced.makespan == plain.makespan, "tracing changed the schedule"
+    overheads.append(cpu_t / cpu_u - 1.0)
+    print(f"  untraced {cpu_u:.3f} cpu-s, traced {cpu_t:.3f} cpu-s "
+          f"({traced.trace.total} trace events): overhead "
+          f"{overheads[-1]:+.1%}")
+best = min(overheads)
+print(f"  best of {len(overheads)} pairs: {best:+.1%} (bound {tol:.0%})")
+if best > tol:
+    print(f"FAIL: enabled-tracing overhead {best:.1%} > {tol:.0%} "
+          f"in every pair")
+    sys.exit(1)
+traced_evs = traced.events_processed / cpu_t
+
+# anchor against the committed untraced number too (loose floor — same
+# philosophy as BENCH_TOL: catches order-of-magnitude collapses, not noise)
+committed = json.loads(Path("BENCH_sim.json").read_text())
+base = committed["scenarios"].get("fleet_100x2_sustained", {})
+old = (base.get("indexed") or {}).get("events_per_sec")
+if old:
+    floor = old * 0.5
+    print(f"  traced {traced_evs:.0f} ev/s vs committed untraced "
+          f"{old:.0f} (floor {floor:.0f})")
+    if traced_evs < floor:
+        print("FAIL: traced throughput collapsed vs committed baseline")
+        sys.exit(1)
+print("  enabled-tracing overhead bound passed")
 PY
 
 echo "== quick sim benchmark =="

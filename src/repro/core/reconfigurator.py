@@ -91,6 +91,12 @@ class PendingPlug:
 class Reconfigurator:
     """Tracks AQ/RQ per machine and per-VM vCPU counts."""
 
+    # decision-trace bus (repro.core.tracing.TraceBus); attached by the
+    # simulator when ClusterSpec.tracing is enabled, None otherwise — every
+    # emission site is a single `is None` guard, so tracing-off stays
+    # bit-exact against the legacy engine
+    trace = None
+
     def __init__(self, spec: ClusterSpec, max_wait: float = 15.0):
         self.spec = spec
         self.max_wait = max_wait
@@ -137,6 +143,10 @@ class Reconfigurator:
         # expired parks whose outcome (local vs remote launch) is still
         # unknown: task -> target machine, resolved by note_park_outcome
         self._expired_machine: Dict[TaskId, int] = {}
+        # last park_decision decline: (gate, signals) — written only when
+        # the trace bus is attached, read by the scheduler so the park_deny
+        # record carries the task context this method never sees
+        self.last_decline: Optional[Tuple[str, Dict[str, object]]] = None
 
     def _valid_donor(self, vm: int) -> bool:
         if self.vcpus[vm] <= self.spec.min_vcpus_per_vm:
@@ -265,6 +275,11 @@ class Reconfigurator:
                      if m == machine]:
             del self._expired_machine[task]
         self.stats["park_crashed"] += len(cancelled)
+        if self.trace is not None and self.trace.parks:
+            for task in cancelled:
+                self.trace.emit(now, "park_crashed", {
+                    "task": task, "job": task.job_id,
+                    "machine": machine})
         return cancelled
 
     def machine_restarted(self, machine: int, now: float) -> None:
@@ -333,8 +348,19 @@ class Reconfigurator:
                         a.outcome_alpha
                         + (1.0 - a.outcome_alpha) * self.park_outcome_ewma)
                     self.stats["park_wins"] += 1
+                    if self.trace is not None and self.trace.parks:
+                        self.trace.emit(now, "park_outcome", {
+                            "task": parked.task, "job": parked.task.job_id,
+                            "machine": m, "won": True, "cause": "donor_match",
+                            "ewma": self.park_outcome_ewma})
                 self.stats["reconfigurations"] += 1
                 self.stats["total_wait"] += now - parked.parked_at
+                if self.trace is not None and self.trace.parks:
+                    self.trace.emit(now, "reconfig_match", {
+                        "task": parked.task, "job": parked.task.job_id,
+                        "machine": m, "from_vm": donor,
+                        "to_vm": parked.target_vm,
+                        "wait": now - parked.parked_at})
             self._aq_sync(m)
             if not self.rq[m]:
                 self._rq_nonempty.discard(m)
@@ -383,6 +409,12 @@ class Reconfigurator:
                 self._expired_machine[item.task] = m
             out.append(item)
             self.stats["expired"] += 1
+            if self.trace is not None and self.trace.parks:
+                self.trace.emit(now, "park_expired", {
+                    "task": item.task, "job": item.task.job_id,
+                    "machine": m, "parked_at": item.parked_at,
+                    "waited": now - item.parked_at,
+                    "wait_bound": item.wait_bound})
         return out
 
     def note_park_outcome(self, task: TaskId, now: float, won: bool) -> None:
@@ -415,6 +447,12 @@ class Reconfigurator:
             self.fail_streak[m] += 1
             self.last_fail[m] = now
             self.stats["park_losses"] += 1
+        if self.trace is not None and self.trace.parks:
+            self.trace.emit(now, "park_outcome", {
+                "task": task, "job": task.job_id, "machine": m,
+                "won": won, "cause": "reservation" if won else "remote",
+                "fail_streak": self.fail_streak[m],
+                "ewma": self.park_outcome_ewma})
 
     # -- adaptive pressure queries (see AdaptiveConfig) ---------------------
     def predicted_core_wait(self, machine: int, now: float) -> Optional[float]:
@@ -460,11 +498,18 @@ class Reconfigurator:
         streak = self._effective_streak(machine, now)
         if streak >= a.fail_streak_limit:
             self.stats["park_declined"] += 1
+            if self.trace is not None:
+                self.last_decline = ("fail_streak", {
+                    "streak": streak, "limit": a.fail_streak_limit})
             return False, 0.0
         allowance = a.breakeven_margin * breakeven
         pred = self.predicted_core_wait(machine, now)
         if pred is not None and pred + self.spec.hotplug_latency > allowance:
             self.stats["park_declined"] += 1
+            if self.trace is not None:
+                self.last_decline = ("predicted_wait", {
+                    "predicted": pred, "allowance": allowance,
+                    "breakeven": breakeven})
             return False, 0.0
         probing = False
         if self.park_outcome_ewma < a.park_win_floor:
@@ -474,6 +519,10 @@ class Reconfigurator:
             if self._last_park is not None \
                     and now - self._last_park < a.fail_cooldown:
                 self.stats["park_declined"] += 1
+                if self.trace is not None:
+                    self.last_decline = ("win_floor", {
+                        "ewma": self.park_outcome_ewma,
+                        "floor": a.park_win_floor})
                 return False, 0.0
             probing = True
         base = (a.max_wait_floor

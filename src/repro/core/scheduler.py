@@ -64,6 +64,11 @@ class SchedulerBase:
     uses_reconfig = False
     # set by PolicySpec.build: the spec this instance was constructed from
     policy = None
+    # decision-trace bus (repro.core.tracing.TraceBus); attached by the
+    # simulator when ClusterSpec.tracing is enabled, None otherwise.  Every
+    # emission site is behind a single `is None` guard and draws from no
+    # RNG, so tracing-off is bit-exact and tracing-on changes no decision.
+    trace = None
 
     @classmethod
     def from_policy(cls, policy, spec: ClusterSpec):
@@ -359,6 +364,10 @@ class CompletionTimeScheduler(SchedulerBase):
                 # while idle, so the latch cannot observe the drain itself):
                 # the pressured epoch ended — release the overload latch
                 self.overload_mode = False
+                if self.trace is not None and self.trace.overload:
+                    self.trace.emit(now, "latch_release",
+                                    {"cause": "empty_cluster",
+                                     "job": job.spec.job_id})
         self._recompute_demand(job, now)
 
     def _job_deactivated(self, job: JobRuntime) -> None:
@@ -416,6 +425,12 @@ class CompletionTimeScheduler(SchedulerBase):
             # reduce-aware latch releases on map-backlog drain.
             if not self.active or (reduce_aware and self.map_open_jobs == 0):
                 self.overload_mode = False
+                if self.trace is not None and self.trace.overload:
+                    self.trace.emit(now, "latch_release", {
+                        "cause": ("cluster_drained" if not self.active
+                                  else "maps_drained"),
+                        "pending_maps": pending,
+                        "active_jobs": len(self.active)})
             elif (self.spec.faults.enabled and self.spec.faults.crash_mtbf > 0
                     and pending == 0 and self.ready_pending_reduces == 0):
                 # under churn the "next job finds an empty cluster" release
@@ -426,6 +441,10 @@ class CompletionTimeScheduler(SchedulerBase):
                 # with no crash source cannot wedge, and stays bit-exact
                 # with the faults-off latch semantics
                 self.overload_mode = False
+                if self.trace is not None and self.trace.overload:
+                    self.trace.emit(now, "latch_release", {
+                        "cause": "churn_drain",
+                        "active_jobs": len(self.active)})
         elif self.active:
             # both conditions strictly: a backlogged cluster with few wide
             # jobs (the paper's closed mix) is EDF's home regime — only the
@@ -434,6 +453,15 @@ class CompletionTimeScheduler(SchedulerBase):
             if (pending >= a.overload_pending_factor * slots
                     and crowd >= a.overload_active_factor * machines):
                 self.overload_mode = True
+                if self.trace is not None and self.trace.overload:
+                    self.trace.emit(now, "latch_trip", {
+                        "pending_maps": pending, "crowd": crowd,
+                        "pending_bar": a.overload_pending_factor * slots,
+                        "crowd_bar": a.overload_active_factor * machines,
+                        "slots": slots, "machines": machines,
+                        "active_jobs": len(self.active),
+                        "map_open_jobs": self.map_open_jobs,
+                        "overdue": len(self.overdue)})
         return self.overload_mode
 
     def on_task_finished(self, job: JobRuntime, task: TaskId, now: float) -> None:
@@ -695,6 +723,13 @@ class CompletionTimeScheduler(SchedulerBase):
         deadline_critical = slack <= 3.0 * self.reconfig.max_wait
         if (not self.parking or task in self.no_park or deadline_critical
                 or not allow_park):
+            if self.trace is not None and self.trace.parks:
+                self._trace_deny(now, task, node,
+                                 "parking_off" if not self.parking
+                                 else "no_park" if task in self.no_park
+                                 else "deadline_critical" if deadline_critical
+                                 else "remote_fill",
+                                 slack=slack)
             return Launch(task, node, local=False)
         adaptive = self.reconfig.adaptive
         # the crowd bar: under the reduce-aware overload policy only
@@ -716,6 +751,12 @@ class CompletionTimeScheduler(SchedulerBase):
             # stale offers under pressure (measured) — no park beats
             # starting remotely right now, so both parking paths (S_rq and
             # S_aq) are bypassed.
+            if self.trace is not None and self.trace.parks:
+                self._trace_deny(
+                    now, task, node, "crowd_bar",
+                    overload=self.overload_mode, crowd=crowd,
+                    bar=adaptive.park_active_factor
+                    * (self.spec.num_machines - self._machines_down))
             return Launch(task, node, local=False)
         if self.down_nodes:
             # crashed nodes cannot host a parked task; with every replica
@@ -724,6 +765,8 @@ class CompletionTimeScheduler(SchedulerBase):
             placement = tuple(v for v in placement
                               if v not in self.down_nodes)
             if not placement:
+                if self.trace is not None and self.trace.parks:
+                    self._trace_deny(now, task, node, "replicas_down")
                 return Launch(task, node, local=False)
         # S_rq: data nodes by RQ entries desc (a pre-offered donor core means
         # wait ≈ hot-plug latency); else S_aq: data nodes by AQ entries asc.
@@ -738,6 +781,10 @@ class CompletionTimeScheduler(SchedulerBase):
         else:
             p = min(placement, key=lambda v: self.reconfig.aq_len(v))
             if len(self.reconfig.aq[self.spec.machine_of(p)]) >= self.park_depth:
+                if self.trace is not None and self.trace.parks:
+                    self._trace_deny(now, task, node, "aq_saturated",
+                                     machine=self.spec.machine_of(p),
+                                     depth=self.park_depth)
                 return None      # AQ saturated: leave for remote-fill / later
             if adaptive.enabled:
                 # width gate: a narrow backlog (few pending maps per
@@ -748,6 +795,12 @@ class CompletionTimeScheduler(SchedulerBase):
                 if (self.total_pending_maps
                         < adaptive.park_min_width * self.map_open_jobs):
                     self.reconfig.stats["park_declined"] += 1
+                    if self.trace is not None and self.trace.parks:
+                        self._trace_deny(
+                            now, task, node, "width_gate",
+                            pending_maps=self.total_pending_maps,
+                            map_open_jobs=self.map_open_jobs,
+                            min_width=adaptive.park_min_width)
                     return Launch(task, node, local=False)
                 # pressure gate: park only when a donor core is predicted
                 # within the task's remote-launch break-even (the extra
@@ -765,13 +818,36 @@ class CompletionTimeScheduler(SchedulerBase):
                 ok, wait_bound = self.reconfig.park_decision(
                     self.spec.machine_of(p), now, breakeven)
                 if not ok:
+                    if self.trace is not None and self.trace.parks:
+                        # the reconfigurator stashed which of its three
+                        # gates declined (fail_streak / predicted_wait /
+                        # win_floor) plus the signal values it saw
+                        gate, signals = (self.reconfig.last_decline
+                                         or ("park_decision", {}))
+                        self._trace_deny(now, task, node, gate,
+                                         machine=self.spec.machine_of(p),
+                                         **signals)
                     return Launch(task, node, local=False)
         self.reconfig.park_task(task, p, now, wait_bound=wait_bound)
         self.reconfig.release_core(node, now)   # RQ of machine(node)
         self.parked.add(task)
         self._parked_maps_per_job[job.spec.job_id] = (
             self._parked_maps_per_job.get(job.spec.job_id, 0) + 1)
+        if self.trace is not None and self.trace.parks:
+            self.trace.emit(now, "park_admit", {
+                "task": task, "job": job.spec.job_id,
+                "target_vm": p, "machine": self.spec.machine_of(p),
+                "offering_node": node, "wait_bound": wait_bound})
         return Launch(task, p, local=True, via_reconfig=True)
+
+    def _trace_deny(self, now: float, task: TaskId, node: int,
+                    gate: str, **signals: object) -> None:
+        """Emit a park_deny record naming the Algorithm-1 gate that turned
+        this map's park into a remote launch (see tracing.PARK_GATES)."""
+        data: Dict[str, object] = {"task": task, "job": task.job_id,
+                                   "node": node, "gate": gate}
+        data.update(signals)
+        self.trace.emit(now, "park_deny", data)
 
     def _unpark(self, task: TaskId) -> None:
         if task in self.parked:
@@ -785,6 +861,10 @@ class CompletionTimeScheduler(SchedulerBase):
         self._start_map(job, task.index, node)
         job.local_map_launches += 1
         job.reconfig_map_launches += 1
+        if self.trace is not None and self.trace.parks:
+            self.trace.emit(now, "unpark", {
+                "task": task, "job": task.job_id, "node": node,
+                "machine": self.spec.machine_of(node)})
 
     def parked_task_expired(self, task: TaskId, now: float) -> None:
         self._unpark(task)

@@ -499,6 +499,60 @@ def _class_pattern(classes: Tuple[MachineClass, ...]
 
 
 @dataclass(frozen=True)
+class TraceConfig:
+    """Decision-trace bus configuration (``repro.core.tracing``).
+
+    Default **off** — with ``enabled=False`` no bus is created, every
+    emission site is a single ``is None`` guard, zero RNG draws happen,
+    and the config is omitted from ``ClusterSpec.to_dict`` so every
+    sweep-cache hash and pair key is untouched (the fuzz suite carries
+    disabled-but-wild trace knobs through the parity sweep, exactly like
+    ``AdaptiveConfig``/``FaultConfig`` before it).
+
+    When enabled, ``ClusterSim`` wires one ``TraceBus`` through itself,
+    the scheduler and the reconfigurator; the category switches select
+    which record families are emitted:
+
+    * ``launches`` — task ``launch``/``finish`` records (local/remote,
+      speculative, via-reconfig) plus ``job_submit``/``job_finish`` and
+      crash ``kill`` records;
+    * ``parks`` — the Algorithm-1 decision trail: ``park_admit``,
+      ``park_deny`` (with the failing gate named), ``park_outcome``,
+      ``reconfig_match``, ``unpark``, ``park_expired``, ``park_crashed``;
+    * ``overload`` — ``latch_trip``/``latch_release`` with the triggering
+      counters;
+    * ``faults`` — full-context twins of the ``fault_log`` entries
+      (crash/restart/burst/re-replication);
+    * ``pressure_every`` — seconds between cluster ``pressure`` snapshots
+      (EWMAs, fail streaks, rq depth, map_open_jobs); 0 disables them.
+
+    ``max_events`` bounds retained records (the per-kind counters keep
+    counting past it; overflow is reported in ``TraceBus.dropped``).
+    """
+
+    enabled: bool = False
+    launches: bool = True
+    parks: bool = True
+    overload: bool = True
+    faults: bool = True
+    pressure_every: float = 0.0
+    max_events: int = 1_000_000
+
+    def __post_init__(self) -> None:
+        if self.pressure_every < 0:
+            raise ValueError("pressure_every must be non-negative")
+        if self.max_events < 0:
+            raise ValueError("max_events must be non-negative")
+
+    def to_dict(self) -> Dict[str, object]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "TraceConfig":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class ClusterSpec:
     """Static shape of the virtualized cluster (paper §5: 20 machines,
     2 map + 2 reduce slots per node)."""
@@ -517,6 +571,7 @@ class ClusterSpec:
     remote_penalty_scale: float = 1.0
     adaptive: AdaptiveConfig = AdaptiveConfig()
     faults: FaultConfig = FaultConfig()
+    tracing: TraceConfig = TraceConfig()
 
     @property
     def num_nodes(self) -> int:
@@ -542,6 +597,10 @@ class ClusterSpec:
             del d["faults"]
         else:
             d["faults"] = self.faults.to_dict()
+        # tracing is a pure observer: results are bit-identical with it
+        # on or off, so it is *always* omitted — a traced replay of a
+        # cached cell must hash onto the same cache entry
+        del d["tracing"]
         return d
 
     @classmethod
@@ -551,6 +610,8 @@ class ClusterSpec:
             d["adaptive"] = AdaptiveConfig.from_dict(d["adaptive"])
         if isinstance(d.get("faults"), dict):
             d["faults"] = FaultConfig.from_dict(d["faults"])
+        if isinstance(d.get("tracing"), dict):
+            d["tracing"] = TraceConfig.from_dict(d["tracing"])
         return cls(**d)
 
 

@@ -7,9 +7,12 @@ Subcommands::
     run        sweep a (trace x cluster x policy x seeds) grid, cached
     compare    run two policies on the same grid, paired-bootstrap stats
     regimes    fleet-scale preset x cluster-shape atlas (regime report)
+    explain    replay one atlas cell with the decision-trace bus on and
+               print a decision-attribution summary (park/latch story)
     paper      reproduce the paper's §5 evaluation and check its claims
     policies   list the registered scheduler policies (--smoke: run each
                on a tiny cluster and flag stranded work)
+    faults     list the named fault-injection profiles (--faults values)
 
 Scheduler arguments accept either a registered policy name (``proposed``,
 ``adaptive``, ``adaptive_ra``, ``delay``, ``fair``, ``fifo``, ...) or an
@@ -340,6 +343,51 @@ def cmd_policies(args) -> int:
     return 0
 
 
+def cmd_explain(args) -> int:
+    from repro.experiments.telemetry import explain_cell
+    if args.preset not in PRESETS:
+        raise SystemExit(f"unknown preset {args.preset!r}; available: "
+                         f"{', '.join(sorted(PRESETS))}")
+    if args.shape not in FLEET_SHAPES:
+        raise SystemExit(f"unknown shape {args.shape!r}; available: "
+                         f"{', '.join(FLEET_SHAPES)}")
+    if args.fabric not in regimes_mod.FABRICS:
+        raise SystemExit(f"unknown fabric {args.fabric!r}; available: "
+                         f"{', '.join(regimes_mod.FABRICS)}")
+    if args.faults not in regimes_mod.FAULT_PROFILES:
+        raise SystemExit(f"unknown fault profile {args.faults!r}; available: "
+                         f"{', '.join(regimes_mod.FAULT_PROFILES)}")
+    try:
+        text, _, _ = explain_cell(
+            args.preset, args.shape,
+            policy=args.policy, baseline=args.baseline, seed=args.seed,
+            fabric=args.fabric, replication=args.replication,
+            faults=args.faults, cache_dir=args.cache,
+            store=not args.no_store, export_dir=args.export)
+    except (PolicyError, ValueError) as e:
+        raise SystemExit(f"explain failed: {e}")
+    print(text)
+    return 0
+
+
+def cmd_faults(args) -> int:
+    if not args.list:
+        raise SystemExit("faults: nothing to do (did you mean --list?)")
+    print(f"{'profile':14s} {'enabled':8s} {'mtbf':>7s} {'mttr':>6s} "
+          f"{'rerepl':>7s} machine classes")
+    for name, fc in regimes_mod.FAULT_PROFILES.items():
+        classes = ", ".join(
+            f"{mc.name}(w={mc.weight}, speed={mc.speed}, "
+            f"mtbf_scale={mc.mtbf_scale})"
+            for mc in fc.machine_classes) or "-"
+        mtbf = f"{fc.crash_mtbf:.0f}" if fc.enabled else "-"
+        mttr = f"{fc.crash_mttr:.0f}" if fc.enabled else "-"
+        rer = f"{fc.rereplicate_after:.0f}" if fc.enabled else "-"
+        print(f"{name:14s} {str(fc.enabled):8s} {mtbf:>7s} {mttr:>6s} "
+              f"{rer:>7s} {classes}")
+    return 0
+
+
 def cmd_paper(args) -> int:
     seeds = (QUICK_SEEDS if args.quick else FULL_SEEDS)
     if args.seeds is not None:
@@ -446,6 +494,41 @@ def main(argv=None) -> int:
                          "(e.g. EXPERIMENTS.md)")
     rg.add_argument("--verbose", action="store_true")
     rg.set_defaults(func=cmd_regimes)
+
+    ex = sub.add_parser("explain",
+                        help="replay one atlas cell with tracing on and "
+                             "attribute its scheduling decisions")
+    ex.add_argument("preset", help="regime preset: "
+                    + ", ".join(sorted(PRESETS)))
+    ex.add_argument("shape", help="cluster shape: " + ", ".join(FLEET_SHAPES))
+    ex.add_argument("--policy", default="adaptive",
+                    help="policy to explain (default: adaptive)")
+    ex.add_argument("--baseline", default="proposed",
+                    help="comparison policy run on identical inputs "
+                         "(default: proposed)")
+    ex.add_argument("--seed", type=int, default=0)
+    ex.add_argument("--fabric", default="1GbE",
+                    help="network fabric: " + ", ".join(regimes_mod.FABRICS))
+    ex.add_argument("--replication", type=int, default=1)
+    ex.add_argument("--faults", default="none",
+                    help="fault profile: "
+                         + ", ".join(regimes_mod.FAULT_PROFILES))
+    ex.add_argument("--cache", type=Path, default=DEFAULT_CACHE,
+                    help="warehouse dir; the policy's folded summary is "
+                         "stored next to the cell's RunRecord "
+                         f"(default: {DEFAULT_CACHE})")
+    ex.add_argument("--export", type=Path, default=None,
+                    help="also write trace.jsonl + trace.chrome.json "
+                         "(Perfetto) for both runs into this directory")
+    ex.add_argument("--no-store", action="store_true",
+                    help="skip writing the summary into the warehouse")
+    ex.set_defaults(func=cmd_explain)
+
+    fl = sub.add_parser("faults",
+                        help="fault-injection profiles accepted by --faults")
+    fl.add_argument("--list", action="store_true",
+                    help="list the named profiles and their knobs")
+    fl.set_defaults(func=cmd_faults)
 
     pl = sub.add_parser("policies",
                         help="list registered scheduler policies "

@@ -178,12 +178,26 @@ def build_scheduler(kind: str, spec: ClusterSpec, *, legacy: bool = False):
 
 
 def run_scenario(name: str, *, scheduler="proposed", seed: int = 0,
-                 engine: str = "indexed", until: float = 10_000_000.0):
+                 engine: str = "indexed", until: float = 10_000_000.0,
+                 tracing=None):
     """Run one named scenario; returns the ``SimResult``.  ``scheduler`` is
-    any policy value ``PolicySpec.parse`` accepts (name, JSON, dict, spec)."""
+    any policy value ``PolicySpec.parse`` accepts (name, JSON, dict, spec).
+    ``tracing`` enables the decision-trace bus on the indexed engine: pass a
+    ``TraceConfig`` (or ``True`` for the default-on config); the result's
+    ``trace`` attribute then carries the bus.  The legacy engine has no bus
+    — tracing there is rejected rather than silently dropped."""
+    import dataclasses
+
     from repro.core.policies import build_policy
     sc = SCENARIOS[name]
     spec = sc.cluster()
+    if tracing:
+        from repro.core.types import TraceConfig
+        if tracing is True:
+            tracing = TraceConfig(enabled=True)
+        if engine == "legacy":
+            raise ValueError("tracing requires the indexed engine")
+        spec = dataclasses.replace(spec, tracing=tracing)
     jobs = sc.jobs(spec, seed=seed)
     sched = build_policy(scheduler, spec, legacy=(engine == "legacy"))
     if engine == "legacy":

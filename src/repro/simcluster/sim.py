@@ -52,6 +52,7 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.scheduler import CompletionTimeScheduler, Launch, SchedulerBase
+from repro.core.tracing import FaultEvent, TraceBus
 from repro.core.types import ClusterSpec, JobRuntime, JobSpec, TaskId, TaskKind
 
 
@@ -66,6 +67,10 @@ class RunningTask:
     # set by _kill_running when a crash kills this attempt: its pending
     # finish event is void (the task may re-launch under the same live key)
     dead: bool = False
+    # set when speculation cancels this attempt (its twin finished first):
+    # distinguishes an already-killed attempt's stale finish from the
+    # reconfig double-launch loser, which is dropped silently otherwise
+    cancelled: bool = False
 
 
 @dataclass
@@ -80,7 +85,9 @@ class SimResult:
     # and the (time, kind, machine) event log — the log is the
     # determinism pin's artifact (same config+seed => byte-identical)
     fault_stats: Dict[str, int] = field(default_factory=dict)
-    fault_log: List[Tuple[float, str, int]] = field(default_factory=list)
+    fault_log: List[FaultEvent] = field(default_factory=list)
+    # decision-trace bus (ClusterSpec.tracing; None when tracing is off)
+    trace: Optional[TraceBus] = None
 
     # -- derived metrics ----------------------------------------------------
     def completion_time(self, job_id: str) -> float:
@@ -171,10 +178,24 @@ class ClusterSim:
             scheduler, "reconfig", None) if scheduler.uses_reconfig else None
         if self.reconfig is not None:
             self.reconfig.validator = lambda vm: self.free_map(vm) > 0
+        # -- decision-trace bus (TraceConfig; None = off, zero overhead) -----
+        self.trace: Optional[TraceBus] = None
+        if spec.tracing.enabled:
+            self.trace = TraceBus(spec.tracing)
+            # one bus shared by every decision maker: the scheduler and the
+            # reconfigurator emit through the same sink, so the exported
+            # trace interleaves launches, parks and latch flips in time order
+            scheduler.trace = self.trace
+            if self.reconfig is not None:
+                self.reconfig.trace = self.trace
+            self._next_pressure = 0.0
         # -- fault injection (FaultConfig; None = disabled, zero overhead) ---
         self.faults = spec.faults if spec.faults.enabled else None
         self.down_nodes: Set[int] = set()
-        self.fault_log: List[Tuple[float, str, int]] = []
+        # FaultEvent named tuples: json.dumps renders them byte-identically
+        # to the bare (time, kind, machine) tuples of earlier versions, so
+        # the byte-reproducibility pins in tests/test_faults.py hold
+        self.fault_log: List[FaultEvent] = []
         self.fault_stats = {"crashes": 0, "restarts": 0, "tasks_lost": 0,
                             "tasks_reexecuted": 0, "blocks_rereplicated": 0,
                             "bursts": 0}
@@ -291,6 +312,12 @@ class ClusterSim:
                 self._pending_submits -= 1
                 self._job_seq[data.job_id] = len(self._job_seq)
                 self.sched.job_added(data, now)
+                if self.trace is not None and self.trace.launches:
+                    rt_job = self.sched.jobs[data.job_id]
+                    self.trace.emit(now, "job_submit", {
+                        "job": data.job_id, "maps": data.u_m,
+                        "reduces": data.v_r,
+                        "deadline": rt_job.absolute_deadline})
                 if self._hb_dead:
                     # revive heartbeat chains that stopped while the cluster
                     # was idle — without this, a job submitted after an idle
@@ -355,6 +382,7 @@ class ClusterSim:
             events_processed=self.events_processed,
             fault_stats=dict(self.fault_stats) if faults is not None else {},
             fault_log=list(self.fault_log),
+            trace=self.trace,
         )
         return result
 
@@ -385,6 +413,14 @@ class ClusterSim:
             self.red_running[launch.node].append(rt)
         self.live[(launch.task, speculative)] = rt
         self._push(rt.finish, "finish", rt)
+        tr = self.trace
+        if tr is not None and tr.launches:
+            tr.emit(now, "launch", {
+                "task": launch.task, "job": launch.task.job_id,
+                "tkind": launch.task.kind.value, "node": launch.node,
+                "machine": self.spec.machine_of(launch.node),
+                "local": launch.local, "spec": speculative,
+                "via_reconfig": launch.via_reconfig})
 
     def _on_finish(self, rt: RunningTask, now: float) -> None:
         if rt.dead:
@@ -407,6 +443,15 @@ class ClusterSim:
                        else self.red_running)[rt.node]
                 if rt in lst:
                     lst.remove(rt)
+            if self.trace is not None and self.trace.launches \
+                    and not rt.cancelled:
+                # the reconfig double-launch loser: twin-cancelled attempts
+                # already emitted their kill at cancellation time
+                self.trace.emit(now, "kill", {
+                    "task": rt.task, "job": rt.task.job_id,
+                    "tkind": rt.task.kind.value, "node": rt.node,
+                    "spec": rt.speculative, "start": rt.start,
+                    "cause": "stale_duplicate"})
             return
         del self.live[(rt.task, rt.speculative)]
         lst = (self.map_running if rt.task.kind == TaskKind.MAP
@@ -420,11 +465,32 @@ class ClusterSim:
         twin_key = (rt.task, not rt.speculative)
         if twin_key in self.live:
             twin = self.live.pop(twin_key)
+            twin.cancelled = True
             tl = (self.map_running if rt.task.kind == TaskKind.MAP
                   else self.red_running)[twin.node]
             if twin in tl:
                 tl.remove(twin)
+            if self.trace is not None and self.trace.launches:
+                self.trace.emit(now, "kill", {
+                    "task": twin.task, "job": twin.task.job_id,
+                    "tkind": twin.task.kind.value, "node": twin.node,
+                    "spec": twin.speculative, "start": twin.start,
+                    "cause": "twin_cancel"})
         self.sched.task_finished(rt.task, rt.node, now, now - rt.start)
+        tr = self.trace
+        if tr is not None and tr.launches:
+            tr.emit(now, "finish", {
+                "task": rt.task, "job": rt.task.job_id,
+                "tkind": rt.task.kind.value, "node": rt.node,
+                "machine": self.spec.machine_of(rt.node),
+                "start": rt.start, "duration": now - rt.start,
+                "local": rt.local, "spec": rt.speculative})
+            fin_job = self.sched.jobs[rt.task.job_id]
+            if fin_job.all_done and fin_job.finish_time == now:
+                tr.emit(now, "job_finish", {
+                    "job": rt.task.job_id,
+                    "duration": now - fin_job.spec.submit_time,
+                    "deadline_met": now <= fin_job.absolute_deadline + 1e-9})
         if rt.task.kind == TaskKind.MAP:
             # the job's mean map duration changed: its head straggler may
             # now cross the speculation threshold earlier (or at all)
@@ -488,6 +554,34 @@ class ClusterSim:
             self._match_reconfig(now)   # pair fresh AQ entries immediately
         if self.speculative:
             self._maybe_speculate(node, now)
+        tr = self.trace
+        if (tr is not None and tr.pressure_every > 0.0
+                and now >= self._next_pressure):
+            self._next_pressure = now + tr.pressure_every
+            self._emit_pressure(now)
+
+    def _emit_pressure(self, now: float) -> None:
+        """Periodic cluster pressure snapshot (TraceConfig.pressure_every):
+        the same incremental signals park_decision and the overload latch
+        read, so a timeline of these explains every admission flip."""
+        sched = self.sched
+        data: Dict[str, object] = {
+            "active_jobs": len(sched.active),
+            "pending_maps": sched.total_pending_maps,
+            "ready_reduces": sched.ready_pending_reduces,
+            "map_open_jobs": sched.map_open_jobs,
+            "overload": bool(getattr(sched, "overload_mode", False)),
+            "down_nodes": len(self.down_nodes),
+        }
+        rc = self.reconfig
+        if rc is not None:
+            data["parked"] = sum(len(q) for q in rc.aq)
+            data["rq_depth"] = list(rc.rq_depth)
+            data["fail_streak"] = list(rc.fail_streak)
+            data["offer_ewma"] = list(rc.offer_ewma)
+            data["free_ewma"] = list(rc.free_ewma)
+            data["park_outcome_ewma"] = rc.park_outcome_ewma
+        self.trace.emit(now, "pressure", data)
 
     # -- fault injection (FaultConfig; handlers unreachable when off) ---------
     def _fault_live(self) -> bool:
@@ -521,8 +615,13 @@ class ClusterSim:
             return
         self.machine_up[machine] = False
         self.fault_stats["crashes"] += 1
-        self.fault_log.append((now, "crash", machine))
+        self.fault_log.append(FaultEvent(now, "crash", machine))
         nodes = self._machine_nodes(machine)
+        if self.trace is not None and self.trace.faults:
+            self.trace.emit(now, "crash", {
+                "machine": machine, "nodes": nodes,
+                "running": sum(len(self.map_running[v])
+                               + len(self.red_running[v]) for v in nodes)})
         self.down_nodes.update(nodes)
         for v in nodes:
             # bump the chain epoch: any pending heartbeat of this node is
@@ -556,6 +655,12 @@ class ClusterSim:
         del self.live[key]
         rt.dead = True                    # voids the pending finish event
         self.fault_stats["tasks_lost"] += 1
+        tr = self.trace
+        if tr is not None and tr.launches:
+            tr.emit(now, "kill", {
+                "task": rt.task, "job": rt.task.job_id,
+                "tkind": rt.task.kind.value, "node": rt.node,
+                "spec": rt.speculative, "start": rt.start, "cause": "crash"})
         if rt.speculative:
             self.spec_launched.discard(rt.task)
             return
@@ -567,6 +672,11 @@ class ClusterSim:
             if twin in tl:
                 tl.remove(twin)
             self.spec_launched.discard(rt.task)
+            if tr is not None and tr.launches:
+                tr.emit(now, "kill", {
+                    "task": twin.task, "job": twin.task.job_id,
+                    "tkind": twin.task.kind.value, "node": twin.node,
+                    "spec": True, "start": twin.start, "cause": "crash"})
         self.lost_pending.add(rt.task)
         self.sched.task_lost(rt.task, rt.node, now)
 
@@ -575,7 +685,9 @@ class ClusterSim:
         self.machine_up[machine] = True
         self._machine_epoch[machine] += 1
         self.fault_stats["restarts"] += 1
-        self.fault_log.append((now, "restart", machine))
+        self.fault_log.append(FaultEvent(now, "restart", machine))
+        if self.trace is not None and self.trace.faults:
+            self.trace.emit(now, "restart", {"machine": machine})
         nodes = self._machine_nodes(machine)
         self.down_nodes.difference_update(nodes)
         if self.reconfig is not None:
@@ -600,7 +712,11 @@ class ClusterSim:
             return
         self._burst_until[machine] = now + f.burst_duration
         self.fault_stats["bursts"] += 1
-        self.fault_log.append((now, "burst", machine))
+        self.fault_log.append(FaultEvent(now, "burst", machine))
+        if self.trace is not None and self.trace.faults:
+            self.trace.emit(now, "burst", {
+                "machine": machine, "until": self._burst_until[machine],
+                "slowdown": f.burst_slowdown})
         self._push(now + self._burst_rng[machine].expovariate(
             1.0 / f.burst_rate), "burst", machine)
 
@@ -632,7 +748,10 @@ class ClusterSim:
                 count += 1
         if count:
             self.fault_stats["blocks_rereplicated"] += count
-            self.fault_log.append((now, "rereplicate", machine))
+            self.fault_log.append(FaultEvent(now, "rereplicate", machine))
+            if self.trace is not None and self.trace.faults:
+                self.trace.emit(now, "rereplicate",
+                                {"machine": machine, "blocks": count})
 
     # -- incremental speculative execution ------------------------------------
     def _spec_push_wake(self, jid: str, wake: float) -> None:

@@ -62,6 +62,13 @@ Fault-path invariants (FaultConfig enabled) extend the audit again:
 The final tests inject off-by-ones (pending-map counter, locality counter,
 rq_depth, map_open_jobs on mass task loss) and assert the recount catches
 them — the detection property itself is pinned.
+
+Decision-trace reconciliation (TraceConfig enabled) closes the loop from
+the other side: the bus is a redundant *event-level* view of the same
+run, so every launch/finish/kill/park event must reconcile against the
+final per-job counters — per-job local/remote/reconfig launch tallies,
+map/reduce completion counts, the attempt conservation law
+(launches = finishes + kills), the park ledger, and the fault log.
 """
 import bisect
 import dataclasses
@@ -74,7 +81,7 @@ from repro.core.baselines import FairScheduler
 from repro.core.policies import PolicySpec
 from repro.core.reconfigurator import Reconfigurator
 from repro.core.scheduler import CompletionTimeScheduler, SchedulerBase
-from repro.core.types import TaskKind
+from repro.core.types import TaskKind, TraceConfig
 from repro.simcluster.sim import ClusterSim
 from test_parity_fuzz import build_scenario, _schedulers, fuzz_fault_config
 
@@ -548,6 +555,106 @@ def test_down_node_launch_audit_fires():
     task = TaskId(job_id=job.job_id, kind=TaskKind.MAP, index=0)
     with pytest.raises(InvariantViolation, match="down node"):
         sim._launch(Launch(task, 0, local=True), 0.0)
+
+
+# -- decision-trace reconciliation --------------------------------------------
+
+def run_traced(scenario_seed: int, scheduler: str, faults: bool = False):
+    """A random scenario with the decision-trace bus ON (and optionally
+    churn): returns (sim, result) with ``result.trace`` carrying the bus."""
+    sc = build_scenario(random.Random(scenario_seed))
+    spec = sc["spec"]
+    if faults:
+        spec = dataclasses.replace(
+            spec, faults=fuzz_fault_config(
+                random.Random(scenario_seed * 31 + 7), enabled=True))
+    spec = dataclasses.replace(spec, tracing=TraceConfig(enabled=True))
+    sched = PolicySpec(scheduler).build(spec)
+    sim = ClusterSim(spec, sched, seed=sc["sim_seed"],
+                     straggler_prob=sc["straggler_prob"],
+                     straggler_factor=sc["straggler_factor"],
+                     speculative=sc["speculative"],
+                     speculation_threshold=sc["speculation_threshold"])
+    return sim, sim.run(sc["jobs"])
+
+
+def assert_trace_reconciles(sim, res):
+    """Every launch/finish/kill/park event on the bus reconciles against
+    the final per-job counters and the run-level ledgers."""
+    bus = res.trace
+    local, remote, reconfig = {}, {}, {}
+    fin_maps, fin_reds = {}, {}
+    for _, kind, d in bus.events:
+        if kind == "launch" and d["tkind"] == "map" and not d["spec"]:
+            tally = local if d["local"] else remote
+            tally[d["job"]] = tally.get(d["job"], 0) + 1
+            if d["via_reconfig"]:
+                reconfig[d["job"]] = reconfig.get(d["job"], 0) + 1
+        elif kind == "finish":
+            tally = fin_maps if d["tkind"] == "map" else fin_reds
+            tally[d["job"]] = tally.get(d["job"], 0) + 1
+    for jid, job in res.jobs.items():
+        if job.local_map_launches != local.get(jid, 0):
+            raise InvariantViolation(
+                f"{jid}: local_map_launches={job.local_map_launches} != "
+                f"{local.get(jid, 0)} local launch events")
+        if job.remote_map_launches != remote.get(jid, 0):
+            raise InvariantViolation(
+                f"{jid}: remote_map_launches={job.remote_map_launches} != "
+                f"{remote.get(jid, 0)} remote launch events")
+        if job.reconfig_map_launches != reconfig.get(jid, 0):
+            raise InvariantViolation(
+                f"{jid}: reconfig_map_launches="
+                f"{job.reconfig_map_launches} != "
+                f"{reconfig.get(jid, 0)} via_reconfig launch events")
+        if fin_maps.get(jid, 0) != job.spec.u_m \
+                or fin_reds.get(jid, 0) != job.spec.v_r:
+            raise InvariantViolation(
+                f"{jid}: finish events ({fin_maps.get(jid, 0)} map, "
+                f"{fin_reds.get(jid, 0)} reduce) != task counts "
+                f"({job.spec.u_m}, {job.spec.v_r})")
+    # attempt conservation: every launched attempt finishes or is killed
+    if bus.count("launch") != bus.count("finish") + bus.count("kill"):
+        raise InvariantViolation(
+            f"attempt leak: {bus.count('launch')} launches != "
+            f"{bus.count('finish')} finishes + {bus.count('kill')} kills")
+    # park ledger: admissions/expiries/matches mirror the reconfig stats
+    stats = res.reconfig_stats
+    if stats:
+        for ev, key in (("park_admit", "parked"), ("park_expired", "expired"),
+                        ("reconfig_match", "reconfigurations")):
+            if bus.count(ev) != stats[key]:
+                raise InvariantViolation(
+                    f"{ev} events={bus.count(ev)} != "
+                    f"reconfig_stats[{key}]={stats[key]}")
+        if bus.count("unpark") != sum(j.reconfig_map_launches
+                                      for j in res.jobs.values()):
+            raise InvariantViolation("unpark events != reconfig launches")
+    # fault events mirror the typed fault log
+    for kind in ("crash", "restart", "burst", "rereplicate"):
+        logged = sum(1 for e in sim.fault_log if e.kind == kind)
+        if bus.count(kind) != logged:
+            raise InvariantViolation(
+                f"{kind} events={bus.count(kind)} != {logged} in fault_log")
+
+
+@pytest.mark.parametrize("scheduler", ["proposed", "adaptive", "fair"])
+def test_trace_events_reconcile_with_job_counters(scheduler):
+    for k in range(N_RUNS):
+        sim, res = run_traced(303300 + k, scheduler)
+        assert res.trace is not None and res.trace.total > 0
+        assert_trace_reconciles(sim, res)
+
+
+def test_trace_events_reconcile_under_churn():
+    """The reconciliation holds through crash kills and re-executions, and
+    the churn runs actually crash (the fault half of the audit ran)."""
+    crashes = 0
+    for k in range(6):
+        sim, res = run_traced(626200 + k, "adaptive", faults=True)
+        assert_trace_reconciles(sim, res)
+        crashes += res.trace.count("crash")
+    assert crashes > 0
 
 
 def test_injected_map_open_jobs_bug_on_mass_loss_is_caught(monkeypatch):

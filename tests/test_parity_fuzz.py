@@ -40,6 +40,12 @@ seeded crash/churn scenarios across all six policy columns, pinning
 liveness: the event loop drains (no deadlock, no event-queue leak), every
 job finishes, every crash-lost primary task is re-executed, and nothing is
 left running on a down node.
+
+The **TraceConfig knobs ride the same parity sweep**: every scenario
+carries a disabled-but-wild trace config — the decision-trace bus is a
+pure observer, so arbitrary (disabled) tracing knobs must not perturb a
+single decision in either engine.  (Tracing-ON bit-exactness has its own
+pins in ``tests/test_tracing.py``.)
 """
 import dataclasses
 import os
@@ -49,7 +55,7 @@ import pytest
 
 from repro.core.policies import PolicyError, PolicySpec
 from repro.core.types import (AdaptiveConfig, ClusterSpec, FaultConfig,
-                              MachineClass)
+                              MachineClass, TraceConfig)
 from repro.simcluster._legacy import LegacyClusterSim
 from repro.simcluster.sim import ClusterSim
 from repro.simcluster.workloads import WORKLOADS, default_deadline, make_job
@@ -125,6 +131,22 @@ def fuzz_fault_config(rng: random.Random,
     )
 
 
+def fuzz_trace_config(rng: random.Random,
+                      enabled: bool = False) -> TraceConfig:
+    """Random-but-valid TraceConfig; ``enabled=False`` for the parity
+    suite (the bus is a pure observer — wild category/cap knobs must be
+    inert while disabled)."""
+    return TraceConfig(
+        enabled=enabled,
+        launches=rng.random() < 0.5,
+        parks=rng.random() < 0.5,
+        overload=rng.random() < 0.5,
+        faults=rng.random() < 0.5,
+        pressure_every=round(rng.uniform(0.0, 60.0), 1),
+        max_events=rng.choice([0, 1, 1000, 1_000_000]),
+    )
+
+
 def build_scenario(rng: random.Random):
     """One random scenario: cluster shape, job mix, sim + scheduler knobs.
     Everything is drawn from ``rng``, so a scenario is reproducible from its
@@ -147,6 +169,10 @@ def build_scenario(rng: random.Random):
         deadline = round(default_deadline(w, gb) * rng.uniform(0.6, 3.0), 1)
         jobs.append(make_job(f"{w}-{i}", w, gb, deadline, spec, rng,
                              submit_time=t, skew=rng.uniform(0.0, 1.5)))
+    # drawn *after* everything else so the tracing knobs don't shift the
+    # pre-existing RNG stream — scenario seeds stay comparable across the
+    # invariant/chaos suites that pin behaviour per seed range
+    spec = dataclasses.replace(spec, tracing=fuzz_trace_config(rng))
     return {
         "spec": spec,
         "jobs": jobs,
@@ -422,6 +448,27 @@ def test_fault_off_is_default_and_inert():
     assert {j: r.finish_time for j, r in res_knobs.jobs.items()} \
         == {j: r.finish_time for j, r in res_plain.jobs.items()}
     assert res_knobs.fault_stats == {} and res_knobs.fault_log == []
+
+
+@pytest.mark.fuzz
+def test_tracing_off_is_default_and_inert():
+    """TraceConfig defaults to off, no bus is attached while disabled, and
+    a disabled config with wild knobs produces the identical run as the
+    default config — the observer analogue of the fault/adaptive pins."""
+    assert TraceConfig().enabled is False
+    sc = build_scenario(random.Random(55057))
+    sc["scheduler"] = "proposed"
+    assert sc["spec"].tracing != TraceConfig()   # wild (disabled) knobs
+    res_knobs = _run_proposed(sc)
+    assert res_knobs.trace is None
+    sc_plain = dict(sc)
+    sc_plain["spec"] = dataclasses.replace(sc["spec"],
+                                           tracing=TraceConfig())
+    sc_plain["jobs"] = [j for j in sc["jobs"]]
+    res_plain = _run_proposed(sc_plain)
+    assert res_knobs.makespan == res_plain.makespan
+    assert {j: r.finish_time for j, r in res_knobs.jobs.items()} \
+        == {j: r.finish_time for j, r in res_plain.jobs.items()}
 
 
 @pytest.mark.fuzz
