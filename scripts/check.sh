@@ -43,6 +43,69 @@ fi
 echo "== policy smoke (every registered policy on a tiny cluster) =="
 python -m repro.experiments policies --smoke
 
+echo "== adaptive smoke (win recovery on saturated; no CI-clear churn loss) =="
+# One saturated and one churn_hi quick cell through the cached experiment
+# runner (first run simulates ~2x6x2 paired seeds, later runs hit the
+# cache).  Guards the two failure modes PR 8 fixed: the overload latch
+# surrendering the closed-mix parking win back to exact-Fair (+0.0), and
+# the adaptive gates losing to the fixed proposed policy under churn with
+# a CI excluding zero.
+#
+# If this gate fails with adaptive-vs-fair exactly +0.0 on a machine that
+# last ran sweeps before PR 8: the bugfix deliberately kept the adaptive
+# cells' cache keys (see ClusterSpec.to_dict — default-valued knobs are
+# omitted so the pinned cell hashes stay), so a pre-PR-8 cache serves
+# stale pre-fix results.  Delete the cache dir once and re-run.
+ADAPTIVE_SMOKE_CACHE="${ADAPTIVE_SMOKE_CACHE:-.exp-cache}"
+python - "$ADAPTIVE_SMOKE_CACHE" <<'PY'
+import sys
+
+from repro.experiments.regimes import QUICK_SEEDS, regime_spec
+from repro.experiments.runner import run_experiment
+from repro.experiments.stats import compare_throughput
+
+cache = sys.argv[1]
+failures = []
+
+# saturated/50x2: the closed-mix cell where the latch used to stand the
+# adaptive columns down to exact Fair.  Require a real recovered win:
+# CI clear of zero vs Fair and at least half the fixed policy's gain.
+by = run_experiment(regime_spec("saturated", "50x2", seeds=QUICK_SEEDS),
+                    cache).by_scheduler()
+ad = compare_throughput(by["fair"], by["adaptive"])
+px = compare_throughput(by["fair"], by["proposed"])
+print(f"  saturated/50x2: adaptive vs fair {ad.mean_gain_pct:+.1f}% "
+      f"[{ad.ci_lo_pct:+.1f}%, {ad.ci_hi_pct:+.1f}%] "
+      f"(proposed {px.mean_gain_pct:+.1f}%)")
+if ad.mean_gain_pct == 0.0:
+    failures.append("saturated/50x2: adaptive surrendered to exact Fair (+0.0)")
+elif not (ad.ci_lo_pct > 0.0 and ad.mean_gain_pct >= 0.5 * px.mean_gain_pct):
+    failures.append(
+        f"saturated/50x2: adaptive win {ad.mean_gain_pct:+.1f}% "
+        f"[{ad.ci_lo_pct:+.1f}%, ...] does not recover half of the fixed "
+        f"policy's {px.mean_gain_pct:+.1f}%")
+
+# churn_hi/20x2: under crash churn the relief gates must never make the
+# adaptive column lose to the fixed policy with a CI excluding zero.
+by = run_experiment(regime_spec("saturated", "20x2", seeds=QUICK_SEEDS,
+                                faults="churn_hi"),
+                    cache).by_scheduler()
+vp = compare_throughput(by["proposed"], by["adaptive"])
+print(f"  saturated/20x2/churn_hi: adaptive vs proposed "
+      f"{vp.mean_gain_pct:+.1f}% [{vp.ci_lo_pct:+.1f}%, {vp.ci_hi_pct:+.1f}%]")
+if vp.ci_hi_pct < 0.0:
+    failures.append(
+        f"saturated/20x2/churn_hi: adaptive loses to fixed with CI "
+        f"excluding zero [{vp.ci_lo_pct:+.1f}%, {vp.ci_hi_pct:+.1f}%]")
+
+if failures:
+    print("\nFAIL:")
+    for f in failures:
+        print(f"  - {f}")
+    sys.exit(1)
+print("  adaptive smoke passed")
+PY
+
 echo "== fault-injection smoke (churn fleet drains; schedule reproducible) =="
 python - <<'PY'
 from repro.simcluster.largescale import run_scenario

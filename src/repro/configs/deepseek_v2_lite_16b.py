@@ -27,6 +27,6 @@ def smoke() -> ModelConfig:
         num_layers=3, d_model=128, n_heads=4, n_kv_heads=4, d_ff=128,
         vocab_size=512,
         n_experts=8, top_k=2, n_shared_experts=1, d_ff_expert=64,
-        n_dense_layers=1, d_ff_dense=256, moe_dispatch_groups=2,
+        n_dense_layers=1, d_ff_dense=256, moe_dispatch_groups=8,
         kv_lora_rank=32, qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32,
         param_dtype="float32", compute_dtype="float32", remat="none")

@@ -283,15 +283,34 @@ def build_policy(spec, cluster: ClusterSpec, *, legacy: bool = False):
 # registrations: the canonical presets + the composed extras
 # ---------------------------------------------------------------------------
 
-def _adaptive_cluster(cluster: ClusterSpec) -> ClusterSpec:
+#: AdaptiveConfig knobs the adaptive presets expose as PolicySpec params
+#: (searchable dimensions; ROADMAP direction 2).  Values mirror the
+#: AdaptiveConfig field defaults, so a default-built spec leaves the
+#: cluster's config untouched and keeps the bare-name cache descriptor.
+_ADAPTIVE_PARAM_KNOBS: Dict[str, object] = {
+    "surge_width": 16.0,
+    "crash_discount": True,
+    "ewma_gap_cap": 4.0,
+}
+
+
+def _adaptive_cluster(cluster: ClusterSpec,
+                      p: Optional[Mapping[str, object]] = None) -> ClusterSpec:
     """The cluster with its AdaptiveConfig switched on (the adaptive knobs
     themselves live on ``ClusterSpec`` and are part of the *cluster* cache
-    identity, exactly as before)."""
-    if cluster.adaptive.enabled:
+    identity, exactly as before).  ``p`` (the policy's effective params)
+    may override the ``_ADAPTIVE_PARAM_KNOBS`` fields — e.g. the
+    ``surge_width=0`` ablation recovers the pre-PR-8 latch."""
+    overrides = {}
+    if p is not None:
+        overrides = {k: p[k] for k in _ADAPTIVE_PARAM_KNOBS
+                     if k in p and p[k] != getattr(cluster.adaptive, k)}
+    if cluster.adaptive.enabled and not overrides:
         return cluster
     return dataclasses.replace(
         cluster,
-        adaptive=dataclasses.replace(cluster.adaptive, enabled=True))
+        adaptive=dataclasses.replace(cluster.adaptive, enabled=True,
+                                     **overrides))
 
 
 def _legacy_proposed(cluster: ClusterSpec, p: Dict[str, object]):
@@ -342,11 +361,11 @@ def _build_proposed(cluster: ClusterSpec, p: Dict[str, object]):
                 "reconfiguration policy (AdaptiveConfig) and the latching "
                 "overload detector switched on.",
     components={"ordering": "edf", "park": "adaptive", "overload": "latch"},
-    defaults={"max_wait": 30.0, "park_depth": 2})
+    defaults={"max_wait": 30.0, "park_depth": 2, **_ADAPTIVE_PARAM_KNOBS})
 def _build_adaptive(cluster: ClusterSpec, p: Dict[str, object]):
     from repro.core.reconfigurator import Reconfigurator
     from repro.core.scheduler import CompletionTimeScheduler
-    cluster = _adaptive_cluster(cluster)
+    cluster = _adaptive_cluster(cluster, p)
     return CompletionTimeScheduler(
         cluster, Reconfigurator(cluster, max_wait=p["max_wait"]),
         park_depth=p["park_depth"], overload="latch")
@@ -360,11 +379,11 @@ def _build_adaptive(cluster: ClusterSpec, p: Dict[str, object]):
                 "neither trip nor hold it.",
     components={"ordering": "edf", "park": "adaptive",
                 "overload": "reduce_aware"},
-    defaults={"max_wait": 30.0, "park_depth": 2})
+    defaults={"max_wait": 30.0, "park_depth": 2, **_ADAPTIVE_PARAM_KNOBS})
 def _build_adaptive_ra(cluster: ClusterSpec, p: Dict[str, object]):
     from repro.core.reconfigurator import Reconfigurator
     from repro.core.scheduler import CompletionTimeScheduler
-    cluster = _adaptive_cluster(cluster)
+    cluster = _adaptive_cluster(cluster, p)
     return CompletionTimeScheduler(
         cluster, Reconfigurator(cluster, max_wait=p["max_wait"]),
         park_depth=p["park_depth"], overload="reduce_aware")

@@ -111,7 +111,8 @@ class Reconfigurator:
         self.validator: Optional[Callable[[int], bool]] = None
         self.stats = {"reconfigurations": 0, "parked": 0, "expired": 0,
                       "total_wait": 0.0, "park_declined": 0,
-                      "park_wins": 0, "park_losses": 0, "park_crashed": 0}
+                      "park_wins": 0, "park_losses": 0, "park_crashed": 0,
+                      "park_crash_discounted": 0}
         # machines with a non-empty AQ / RQ, so match() touches only
         # machines that can possibly pair instead of sweeping all of them
         self._aq_nonempty: Set[int] = set()
@@ -208,8 +209,17 @@ class Reconfigurator:
     def _ewma(self, prev: Optional[float], sample: float) -> float:
         if prev is None:
             return sample
-        a = self.adaptive.ewma_alpha
-        return a * sample + (1.0 - a) * prev
+        a = self.adaptive
+        if (a.enabled and a.ewma_gap_cap > 0.0 and prev > 0.0
+                and sample > a.ewma_gap_cap * prev):
+            # an interval spanning a restart gap (or any long disruption)
+            # says "nothing happened for a while", not "the machine got
+            # this much slower" — clamp it so one outage cannot inflate
+            # the predicted core wait for the whole next epoch.  The
+            # `prev > 0` guard keeps a zero-interval sample (two offers on
+            # one event) from wedging the EWMA at zero forever
+            sample = a.ewma_gap_cap * prev
+        return a.ewma_alpha * sample + (1.0 - a.ewma_alpha) * prev
 
     def observe_core_free(self, vm: int, now: float) -> None:
         """Simulator hook: a core on ``vm`` just freed (map finish), whether
@@ -386,10 +396,14 @@ class Reconfigurator:
         heap = self._park_heap
         adaptive = self.adaptive.enabled
         # NB: `now - parked_at > max_wait` is the seed's exact expression;
-        # rewriting it as `parked_at < now - max_wait` is NOT float-identical
-        # at the boundary and breaks decision parity.
-        while heap and (now - heap[0][0] > 0.0 if adaptive
-                        else now - heap[0][0] > self.max_wait):
+        # rewriting it (as `parked_at < now - max_wait`, or against the
+        # precomputed `parked_at + wait_bound` heap key) is NOT
+        # float-identical at the boundary — and the boundary is the common
+        # case, because parks and expiry checks share the heartbeat grid.
+        # Adaptive mode therefore only *orders* by the expiry key and pops
+        # with the seed's expression against each entry's own bound.
+        while heap and (now - heap[0][3].parked_at > heap[0][3].wait_bound
+                        if adaptive else now - heap[0][0] > self.max_wait):
             _, _, m, item = heapq.heappop(heap)
             q = self.aq[m]
             if not any(it is item for it in q):
@@ -451,6 +465,30 @@ class Reconfigurator:
             self.trace.emit(now, "park_outcome", {
                 "task": task, "job": task.job_id, "machine": m,
                 "won": won, "cause": "reservation" if won else "remote",
+                "fail_streak": self.fail_streak[m],
+                "ewma": self.park_outcome_ewma})
+
+    def discard_park_outcome(self, task: TaskId, now: float) -> None:
+        """Crash-discounted resolution of a pending park outcome: ``task``
+        just launched remotely because every live replica of its data is
+        down — the park lost to the crash, not to core starvation, so the
+        fail-streak and win-rate gates must not be charged
+        (``AdaptiveConfig.crash_discount``).  The park index entry is
+        dropped exactly as in :meth:`note_park_outcome` so the resolution
+        stays one-shot."""
+        hit = self._parked_entry.get(task)
+        if hit is not None:
+            self._drop_parked_entry(task, hit[1])
+            m = hit[0]
+        else:
+            m = self._expired_machine.pop(task, None)
+        if m is None:
+            return
+        self.stats["park_crash_discounted"] += 1
+        if self.trace is not None and self.trace.parks:
+            self.trace.emit(now, "park_outcome", {
+                "task": task, "job": task.job_id, "machine": m,
+                "won": False, "cause": "crash_discount",
                 "fail_streak": self.fail_streak[m],
                 "ewma": self.park_outcome_ewma})
 

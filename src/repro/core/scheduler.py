@@ -350,6 +350,23 @@ class CompletionTimeScheduler(SchedulerBase):
         # on_nodes_up so the overload latch prices pressure against the
         # *effective* capacity (0 whenever faults are off)
         self._machines_down = 0
+        # re-pend debt: map tasks a crash threw back into the pending sets
+        # and that have not been rescheduled yet.  The latch already priced
+        # this work in the first time around — counting it again makes
+        # churn read as a fresh overload surge while the crash is also
+        # *lowering* the trip bars (slots/machines shrink with the fleet).
+        # Only populated when adaptive.enabled and crash_discount are on,
+        # so every other configuration keeps the set empty for free.
+        self._repend_debt: Set[TaskId] = set()
+        # relief latch: once _churn_relief sees a live churn signal it
+        # stays true for the rest of the run — the locality the crashes
+        # destroyed never fully recovers, so the gates stay stood down.
+        # A fleet *configured* crash-prone arms it from t=0: the prologue
+        # before the first crash already runs on borrowed locality, and
+        # parks denied there are wins surrendered once the churn starts.
+        self._relief_sticky = (
+            self.adaptive.enabled and self.adaptive.crash_discount
+            and spec.faults.enabled and spec.faults.crash_mtbf > 0.0)
 
     # -- Algorithm 2 line 2 + lines 17-20 ----------------------------------
     def on_job_added(self, job: JobRuntime, now: float) -> None:
@@ -387,6 +404,43 @@ class CompletionTimeScheduler(SchedulerBase):
             _, _, jid = heapq.heappop(heap)
             if jid in self.active:
                 self.overdue.add(jid)
+
+    def _wide_batch(self, pending: int) -> bool:
+        """True when the queued map backlog averages at least
+        ``AdaptiveConfig.surge_width`` pending maps per map-open job — a
+        *healthy wide batch* (the paper's closed-mix regime at saturation,
+        or churn re-pending lost work), not the many-small-jobs surge the
+        overload latch exists for.  Measured at the latch trip on the
+        regime atlas: saturated/50x2 and 100x2 sit at ~28 pending maps per
+        open job, while the diurnal / bursty / churn surges the latch
+        correctly catches sit at 3-5 (and never exceed ~14 while held).
+        ``surge_width == 0`` disables the signal (pre-PR-8 behavior)."""
+        a = self.adaptive
+        return (a.surge_width > 0.0 and self.map_open_jobs > 0
+                and pending >= a.surge_width * self.map_open_jobs)
+
+    def _churn_relief(self, now: float) -> bool:
+        """True once the cluster has churned: a machine is down, a
+        crash-lost map is still waiting to reschedule (_repend_debt), or
+        either has already happened this run (sticky: the locality damage
+        from a crash outlives the repair — replicas come back on *other*
+        machines — so there is no point the gates' calibration becomes
+        trustworthy again).  Churn is the fixed policy's best regime — re-replication
+        starves locality, so parked maps win big — and the adaptive
+        signals' worst misread: re-pended lost work inflates ``pending``
+        exactly while the crash lowers the trip bars (slots/machines track
+        the surviving fleet), crashed donors read as core starvation, and
+        the between-crash gap windows still run on locality the churn
+        already destroyed.  While this holds, the latch stands down and
+        park admission reverts to the fixed policy's gates.  Off with
+        ``crash_discount`` (the pre-PR-8 churn behavior), and always False
+        when faults are off."""
+        if not self.adaptive.crash_discount:
+            return False
+        if self._machines_down > 0 or self._repend_debt:
+            self._relief_sticky = True
+            return True
+        return self._relief_sticky
 
     def _overload_check(self, now: float) -> bool:
         """Latching overload detector over the incremental pressure state.
@@ -445,13 +499,43 @@ class CompletionTimeScheduler(SchedulerBase):
                     self.trace.emit(now, "latch_release", {
                         "cause": "churn_drain",
                         "active_jobs": len(self.active)})
+            elif self._churn_relief(now):
+                # see _churn_relief: mid-churn the latch stands down
+                self.overload_mode = False
+                if self.trace is not None and self.trace.overload:
+                    self.trace.emit(now, "latch_release", {
+                        "cause": "churn_relief",
+                        "machines_down": self._machines_down,
+                        "repend_debt": len(self._repend_debt),
+                        "pending_maps": pending,
+                        "active_jobs": len(self.active)})
+            elif (self._wide_batch(pending)
+                    and self.reconfig.park_outcome_ewma >= a.park_win_floor):
+                # win-aware release: the backlog evolved into a wide batch
+                # (churn re-pending lost work is the canonical path) —
+                # exact-Fair surrenders the parking win there, so the
+                # latch opens back into EDF + parking.  Vetoed while the
+                # park win-rate EWMA sits under the suspension floor:
+                # releasing into parking that demonstrably loses would
+                # just thrash (the width signal also gates the trip, so a
+                # release cannot immediately re-trip).
+                self.overload_mode = False
+                if self.trace is not None and self.trace.overload:
+                    self.trace.emit(now, "latch_release", {
+                        "cause": "win_release",
+                        "pending_maps": pending,
+                        "map_open_jobs": self.map_open_jobs,
+                        "surge_width": a.surge_width,
+                        "ewma": self.reconfig.park_outcome_ewma})
         elif self.active:
             # both conditions strictly: a backlogged cluster with few wide
             # jobs (the paper's closed mix) is EDF's home regime — only the
             # many-small-jobs crowd flips the economics
             crowd = self.map_open_jobs if reduce_aware else len(self.active)
             if (pending >= a.overload_pending_factor * slots
-                    and crowd >= a.overload_active_factor * machines):
+                    and crowd >= a.overload_active_factor * machines
+                    and not self._wide_batch(pending)
+                    and not self._churn_relief(now)):
                 self.overload_mode = True
                 if self.trace is not None and self.trace.overload:
                     self.trace.emit(now, "latch_trip", {
@@ -461,6 +545,8 @@ class CompletionTimeScheduler(SchedulerBase):
                         "slots": slots, "machines": machines,
                         "active_jobs": len(self.active),
                         "map_open_jobs": self.map_open_jobs,
+                        "surge_width": a.surge_width,
+                        "repend_debt": len(self._repend_debt),
                         "overdue": len(self.overdue)})
         return self.overload_mode
 
@@ -470,6 +556,17 @@ class CompletionTimeScheduler(SchedulerBase):
     def on_task_lost(self, job: JobRuntime, task: TaskId, now: float) -> None:
         # remaining work grew: the Eq.-10 demand must see it immediately
         self._recompute_demand(job, now)
+        if (task.kind == TaskKind.MAP and self.adaptive.enabled
+                and self.adaptive.crash_discount):
+            self._repend_debt.add(task)
+
+    def _drop_pending_map(self, job: JobRuntime, idx: int) -> bool:
+        # a debted map leaving the pending set (rescheduled, or its
+        # speculative twin finished first) settles its re-pend debt
+        if self._repend_debt:
+            self._repend_debt.discard(
+                TaskId(job.spec.job_id, TaskKind.MAP, idx))
+        return super()._drop_pending_map(job, idx)
 
     def parked_task_crashed(self, task: TaskId, now: float) -> None:
         self._unpark(task)
@@ -593,7 +690,19 @@ class CompletionTimeScheduler(SchedulerBase):
         if self.adaptive.enabled:
             task = launch.task
             if task in self.parked or task in self.no_park:
-                self.reconfig.note_park_outcome(task, now, won=launch.local)
+                if (not launch.local and self.adaptive.crash_discount
+                        and self.down_nodes
+                        and all(v in self.down_nodes
+                                for v in job.spec.block_placement[
+                                    task.index])):
+                    # the park lost to the crash, not to core starvation:
+                    # every live replica of its data is down, so the
+                    # remote launch was forced — resolve the park without
+                    # charging the fail-streak / win-rate gates
+                    self.reconfig.discard_park_outcome(task, now)
+                else:
+                    self.reconfig.note_park_outcome(task, now,
+                                                    won=launch.local)
 
     # -- adaptive overload mode (AdaptiveConfig, off by default) --------------
 
@@ -743,17 +852,26 @@ class CompletionTimeScheduler(SchedulerBase):
                  else len(self.active))
         if adaptive.enabled and (
                 self.overload_mode
-                or crowd >= adaptive.park_active_factor
-                * (self.spec.num_machines - self._machines_down)):
+                or (crowd >= adaptive.park_active_factor
+                    * (self.spec.num_machines - self._machines_down)
+                    and not self._wide_batch(self.total_pending_maps)
+                    and not self._churn_relief(now))):
             # Overload latch or a crowd of active jobs: per-job shares sit
             # far below job widths, every parked map lands on its job's
             # phase-critical path, and even live-offer parks queue behind
             # stale offers under pressure (measured) — no park beats
             # starting remotely right now, so both parking paths (S_rq and
-            # S_aq) are bypassed.
+            # S_aq) are bypassed.  Two crowds are exempt: a crowd of *wide*
+            # jobs (the saturated closed mix: _wide_batch), where every job
+            # has plenty of sibling maps to absorb a park's wait, and a
+            # churning fleet (_churn_relief), where re-replication is
+            # starving locality and parking is how the fixed policy wins —
+            # both are exactly where parking pays; the latch
+            # (overload_mode) still suspends parking unconditionally.
             if self.trace is not None and self.trace.parks:
                 self._trace_deny(
-                    now, task, node, "crowd_bar",
+                    now, task, node,
+                    "overload_latch" if self.overload_mode else "crowd_bar",
                     overload=self.overload_mode, crowd=crowd,
                     bar=adaptive.park_active_factor
                     * (self.spec.num_machines - self._machines_down))
@@ -774,9 +892,19 @@ class CompletionTimeScheduler(SchedulerBase):
         wait_bound = None
         if self.reconfig.rq_len(s_rq[0]) > 0:
             p = s_rq[0]
-            if adaptive.enabled:
+            if (adaptive.enabled and not self._churn_relief(now)
+                    and not self._wide_batch(self.total_pending_maps)):
                 # a live donor offer: the match is imminent, so the park
-                # only needs the shortest patience in case it goes stale
+                # only needs the shortest patience in case it goes stale.
+                # Mid-churn (_churn_relief) the full patience applies
+                # instead: offers go stale because the *donor* crashed,
+                # and a 4-second fuse would expire the park into the
+                # no_park blacklist, disqualifying the task from every
+                # later park for no fault of the machine's.  Wide batches
+                # (_wide_batch) also keep full patience: a parked map has
+                # siblings to keep its phase busy, so the stale-offer
+                # downside the fuse hedges against is not on the critical
+                # path there
                 wait_bound = adaptive.max_wait_floor
         else:
             p = min(placement, key=lambda v: self.reconfig.aq_len(v))
@@ -786,12 +914,16 @@ class CompletionTimeScheduler(SchedulerBase):
                                      machine=self.spec.machine_of(p),
                                      depth=self.park_depth)
                 return None      # AQ saturated: leave for remote-fill / later
-            if adaptive.enabled:
-                # width gate: a narrow backlog (few pending maps per
-                # map-open job) puts every parked map on its job's
-                # phase-critical path — launch remotely instead.  Wide
-                # jobs (the paper's closed mix) park for free: a parked
-                # map has plenty of siblings to keep its phase busy.
+            if adaptive.enabled and not self._churn_relief(now):
+                # width gate — stands down under churn relief
+                # (_churn_relief): on a churning fleet narrow backlogs
+                # still park profitably, because re-replication keeps
+                # locality scarce fleet-wide.  Otherwise: a narrow
+                # backlog (few pending maps per map-open job) puts every
+                # parked map on its job's phase-critical path — launch
+                # remotely instead.  Wide jobs (the paper's closed mix)
+                # park for free: a parked map has plenty of siblings to
+                # keep its phase busy.
                 if (self.total_pending_maps
                         < adaptive.park_min_width * self.map_open_jobs):
                     self.reconfig.stats["park_declined"] += 1
@@ -802,9 +934,17 @@ class CompletionTimeScheduler(SchedulerBase):
                             map_open_jobs=self.map_open_jobs,
                             min_width=adaptive.park_min_width)
                     return Launch(task, node, local=False)
+            if (adaptive.enabled and not self._churn_relief(now)
+                    and not self._wide_batch(self.total_pending_maps)):
                 # pressure gate: park only when a donor core is predicted
                 # within the task's remote-launch break-even (the extra
-                # time a remote read would cost on this fabric)
+                # time a remote read would cost on this fabric).  Like the
+                # width gate it stands down under churn relief *and* on
+                # wide batches: both are regimes where parking wins by
+                # default (measured: its win-floor pruning alone cost the
+                # saturated closed mix ~2/3 of the fixed policy's paired
+                # win), so admission reverts to the fixed policy's and the
+                # EWMAs idle as observers
                 prof = job.spec.profile
                 breakeven = (prof.map_time * prof.remote_penalty
                              * self.spec.remote_penalty_scale)

@@ -52,13 +52,37 @@ PARK_GATES: Tuple[str, ...] = (
     "no_park",            # task already expired out of a queue once
     "deadline_critical",  # slack under 3x the parking wait bound
     "remote_fill",        # phase-3 backfill: parking not offered at all
-    "crowd_bar",          # adaptive crowd bar / overload latch active
+    "overload_latch",     # latched overload mode: parking suspended
+    "crowd_bar",          # adaptive crowd bar (unlatched; wide batches exempt)
     "replicas_down",      # every replica holder is crashed
     "aq_saturated",       # anticipation queue at park_depth on the target
     "width_gate",         # pending maps too narrow vs open map jobs
     "fail_streak",        # reconfigurator: consecutive-loss circuit breaker
     "predicted_wait",     # reconfigurator: EWMA wait forecast > breakeven
     "win_floor",          # reconfigurator: park win-rate EWMA under floor
+)
+
+# Causes a latch_release record can carry: the adaptive overload latch's
+# exit vocabulary (see CompletionTimeScheduler._overload_check).
+LATCH_RELEASE_CAUSES: Tuple[str, ...] = (
+    "empty_cluster",      # a new job found a fully-drained cluster
+    "cluster_drained",    # no active job left
+    "maps_drained",       # reduce_aware: map backlog fully drained
+    "churn_drain",        # faults: empty backlog mid-churn ends the epoch
+    "churn_relief",       # faults: fleet degraded / crash-lost maps still
+                          # re-pending — churn, not overload; park
+                          # admission reverts to the fixed policy's gates
+    "win_release",        # win-aware: backlog became a wide batch — parking
+                          # wins there, exact-Fair would surrender them
+)
+
+# Causes a park_outcome record can carry (reconfigurator feedback loop).
+PARK_OUTCOME_CAUSES: Tuple[str, ...] = (
+    "reservation",        # won: launched data-locally via its AQ reservation
+    "donor_match",        # won: launched through a donor-core hot-plug
+    "remote",             # lost: burned its patience, launched remotely
+    "crash_discount",     # discounted: remote launch forced by a crash
+                          # (every live replica down) — gates not charged
 )
 
 # Every record kind the bus can carry, grouped by TraceConfig switch.

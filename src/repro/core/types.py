@@ -10,6 +10,7 @@ HDFS-style block placement) in a backend-agnostic way: the same types drive
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
 import functools
 import heapq
@@ -317,6 +318,24 @@ class AdaptiveConfig:
     # drains (idle epoch reset)
     overload_pending_factor: float = 0.25
     overload_active_factor: float = 0.5
+    # win-aware latch + churn-proof gates.  A backlog averaging at least
+    # surge_width pending maps per map-open job is a *healthy wide batch*
+    # (the paper's closed-mix regime, or churn re-pending lost work), not
+    # the many-small-jobs surge the latch exists for: the latch neither
+    # trips on one nor holds through one (release cause "win_release",
+    # vetoed while the park win-rate EWMA sits under park_win_floor), and
+    # the crowd bar stops suppressing park admission.  0 disables (the
+    # pre-PR-8 latch/crowd behavior).
+    surge_width: float = 16.0
+    # park losses whose remote launch was forced by a crash (every live
+    # replica of the task down) are discounted from the fail-streak and
+    # win-rate gates — churn must not read as park starvation
+    crash_discount: bool = True
+    # offer/core-free EWMA samples are clamped to gap_cap x the running
+    # mean: an interval spanning a restart gap (or any long disruption)
+    # must not inflate the predicted core wait for the whole next epoch.
+    # 0 disables the cap.
+    ewma_gap_cap: float = 4.0
 
     def __post_init__(self) -> None:
         if self.max_wait_floor < 0:
@@ -341,6 +360,10 @@ class AdaptiveConfig:
             raise ValueError("park_min_width must be non-negative")
         if self.overload_pending_factor <= 0 or self.overload_active_factor <= 0:
             raise ValueError("overload entry factors must be positive")
+        if self.surge_width < 0:
+            raise ValueError("surge_width must be non-negative")
+        if self.ewma_gap_cap < 0:
+            raise ValueError("ewma_gap_cap must be non-negative")
 
     def to_dict(self) -> Dict[str, object]:
         return asdict(self)
@@ -348,6 +371,13 @@ class AdaptiveConfig:
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "AdaptiveConfig":
         return cls(**d)
+
+
+#: field defaults looked up by ClusterSpec.to_dict when deciding which
+#: adaptive knobs to omit for cache compatibility (kept next to the class
+#: so a default change cannot silently diverge from the omission rule)
+_ADAPTIVE_FIELD_DEFAULTS: Dict[str, object] = {
+    f.name: f.default for f in dataclasses.fields(AdaptiveConfig)}
 
 
 @dataclass(frozen=True)
@@ -601,6 +631,15 @@ class ClusterSpec:
         # on or off, so it is *always* omitted — a traced replay of a
         # cached cell must hash onto the same cache entry
         del d["tracing"]
+        # cache compatibility for the PR-8 bugfix knobs: at their default
+        # values they are omitted, so the pinned adaptive cell hashes in
+        # tests/test_policies.py (and pre-existing sweep caches) keep
+        # their keys — the fixed behavior is the bugfix semantics of
+        # those cells, not a new cell identity.  Non-default values (e.g.
+        # the surge_width=0 ablation) still hash distinctly.
+        for knob in ("surge_width", "crash_discount", "ewma_gap_cap"):
+            if getattr(self.adaptive, knob) == _ADAPTIVE_FIELD_DEFAULTS[knob]:
+                del d["adaptive"][knob]
         return d
 
     @classmethod

@@ -87,7 +87,17 @@ def _dispatch_group(cfg: ModelConfig, p: Dict, xg: jax.Array,
     logits = jnp.einsum("td,de->te", xg.astype(jnp.float32),
                         p["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                      # [T, E]
-    gate, idx = jax.lax.top_k(probs, k)                          # [T, k]
+    # Layout-stable expert selection: after one optimizer step the fp32
+    # probs differ by ~1 ulp between the single-device and shard_map
+    # layouts (different all-gather/psum reduction orders), and a
+    # near-tied pair of experts can then top_k apart — a discrete routing
+    # flip that amplifies float noise into ~1e-2 loss divergence by step
+    # two.  Select on a bf16-rounded key: layout noise vanishes below the
+    # rounding step, exact bf16 ties collapse to top_k's deterministic
+    # lowest-index-first order, and the gate weights still come from the
+    # full-precision probs via the selected indices.
+    _, idx = jax.lax.top_k(probs.astype(jnp.bfloat16), k)        # [T, k]
+    gate = jnp.take_along_axis(probs, idx, axis=-1)
     gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
 
     # ---- sort-based dispatch (local to this group) ----------------------
@@ -148,6 +158,18 @@ def _moe_ffn_shard_map(cfg: ModelConfig, p: Dict, x: jax.Array):
     dp, tp, fsdp = _ACT["dp"], _ACT["tp"], _ACT["fsdp"]
     B, S, d = x.shape
     dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    # Capacity pooling must not depend on the layout: the single-device path
+    # splits the token stream into ``cfg.moe_dispatch_groups`` contiguous
+    # capacity groups, and each data shard here holds a contiguous slice of
+    # that stream.  Carving the local slice into G/dp subgroups reproduces
+    # the exact same group boundaries — and therefore the same per-group
+    # token drops — as the unsharded layout.  One fused local group (the old
+    # behaviour, G_l=1) pools capacity across the whole shard and drops a
+    # *different* token set, which showed up as ~1e-2 train-loss divergence
+    # on the deepseek parity check.
+    G_l = 1
+    if cfg.moe_dispatch_groups % _ACT["dp_size"] == 0:
+        G_l = cfg.moe_dispatch_groups // _ACT["dp_size"]
 
     def body(xl, router, wg, wu, wd):
         # xl: [B_l, S, d]; wg/wu: [E, d(/fsdp), f_l]; wd: [E, f_l, d(/fsdp)]
@@ -160,9 +182,13 @@ def _moe_ffn_shard_map(cfg: ModelConfig, p: Dict, x: jax.Array):
         wd = checkpoint_name(wd, "fsdp_w")
         pl = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
         T_l = xl.shape[0] * xl.shape[1]
-        out_l, aux_l = _dispatch_group(cfg, pl, xl.reshape(T_l, d),
-                                       partial_sum_axis=tp)
-        aux_l = jax.lax.pmean(aux_l, dp_axes)
+        g = G_l
+        while T_l % g:
+            g -= 1
+        xf = xl.reshape(g, T_l // g, d)
+        out_l, aux_l = jax.vmap(
+            lambda xg: _dispatch_group(cfg, pl, xg, partial_sum_axis=tp))(xf)
+        aux_l = jax.lax.pmean(jnp.mean(aux_l), dp_axes)
         return out_l.reshape(xl.shape), aux_l
 
     in_specs = (P(dp, None, None),               # x: batch over dp

@@ -10,14 +10,16 @@ ROOT = Path(__file__).resolve().parents[1]
 
 
 @pytest.mark.slow
+# deepseek was xfailed here for ~1e-2 two-step divergence.  Root cause was
+# NOT top-k tie-breaks: the shard_map MoE pooled expert capacity per data
+# shard while the single-device path pooled it per dispatch group, so the
+# two layouts dropped different tokens.  With group boundaries aligned (and
+# expert selection keyed on bf16-rounded probs) the step-1 loss is
+# bit-identical; the remaining two-step gap is AdamW amplifying ulp-level
+# gradient summation-order noise and is pinned per-arch in
+# distributed_parity_main.py rather than xfailed.
 @pytest.mark.parametrize("arch", [
-    "tinyllama-1.1b",
-    pytest.param("deepseek-v2-lite-16b", marks=pytest.mark.xfail(
-        reason="MoE top-k routing tie-breaks diverge between the single-"
-               "device and shard_map layouts on this XLA build (~1e-2 rel "
-               "after two steps); needs a dedicated routing-determinism fix",
-        strict=False)),
-    "mamba2-1.3b", "zamba2-1.2b"])
+    "tinyllama-1.1b", "deepseek-v2-lite-16b", "mamba2-1.3b", "zamba2-1.2b"])
 def test_train_step_parity_1_vs_8_devices(arch):
     """FSDP + TP + activation constraints + shard_map MoE must reproduce the
     single-device loss to fp32-accumulation tolerance."""

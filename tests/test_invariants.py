@@ -163,12 +163,19 @@ class InvariantCheckedSim(ClusterSim):
             self.parks_audited += 1
         rc.park_task = park_task
 
-    def _ewma_from_scratch(self, times, alpha):
+    def _ewma_from_scratch(self, times, cfg):
+        # mirrors Reconfigurator._ewma exactly, including the restart-gap
+        # cap (and its prev > 0 guard against wedging at zero)
         ewma = None
         for prev, cur in zip(times, times[1:]):
             sample = cur - prev
-            ewma = sample if ewma is None else (alpha * sample
-                                                + (1.0 - alpha) * ewma)
+            if ewma is None:
+                ewma = sample
+                continue
+            if (cfg.ewma_gap_cap > 0.0 and ewma > 0.0
+                    and sample > cfg.ewma_gap_cap * ewma):
+                sample = cfg.ewma_gap_cap * ewma
+            ewma = cfg.ewma_alpha * sample + (1.0 - cfg.ewma_alpha) * ewma
         return ewma
 
     # -- launch-once + slot caps ------------------------------------------
@@ -332,7 +339,7 @@ class InvariantCheckedSim(ClusterSim):
                     f"park index maps {task} to a dead AQ entry")
         # pressure EWMAs: incremental == recomputed-from-scratch
         if rc.adaptive.enabled:
-            a = rc.adaptive.ewma_alpha
+            a = rc.adaptive
             for m in range(spec.num_machines):
                 for name, times, have in (
                         ("offer", self._offer_times[m], rc.offer_ewma[m]),
@@ -559,9 +566,10 @@ def test_down_node_launch_audit_fires():
 
 # -- decision-trace reconciliation --------------------------------------------
 
-def run_traced(scenario_seed: int, scheduler: str, faults: bool = False):
+def run_traced(scenario_seed: int, scheduler, faults: bool = False):
     """A random scenario with the decision-trace bus ON (and optionally
-    churn): returns (sim, result) with ``result.trace`` carrying the bus."""
+    churn): returns (sim, result) with ``result.trace`` carrying the bus.
+    ``scheduler`` is a policy name or a full :class:`PolicySpec`."""
     sc = build_scenario(random.Random(scenario_seed))
     spec = sc["spec"]
     if faults:
@@ -569,7 +577,7 @@ def run_traced(scenario_seed: int, scheduler: str, faults: bool = False):
             spec, faults=fuzz_fault_config(
                 random.Random(scenario_seed * 31 + 7), enabled=True))
     spec = dataclasses.replace(spec, tracing=TraceConfig(enabled=True))
-    sched = PolicySpec(scheduler).build(spec)
+    sched = PolicySpec.parse(scheduler).build(spec)
     sim = ClusterSim(spec, sched, seed=sc["sim_seed"],
                      straggler_prob=sc["straggler_prob"],
                      straggler_factor=sc["straggler_factor"],
@@ -655,6 +663,29 @@ def test_trace_events_reconcile_under_churn():
         assert_trace_reconciles(sim, res)
         crashes += res.trace.count("crash")
     assert crashes > 0
+
+
+def test_trace_events_reconcile_across_latch_relief_paths():
+    """Both sides of the churn-relief fork keep the ledgers exact.  With
+    ``crash_discount`` off (the pre-PR-8 latch) the overload latch trips
+    mid-churn and parking suspends behind it; with it on (the default) the
+    relief stands the latch down and crash re-pends flow through the
+    ``_repend_debt`` settlement instead.  The same scenario seeds run both
+    ways, every event ledger must reconcile, and the ablation side must
+    actually trip (the audit demonstrably crossed the latched paths)."""
+    abl = PolicySpec("adaptive", params={"crash_discount": False})
+    abl_trips = on_trips = crashes = 0
+    for k in range(6):
+        sim, res = run_traced(626300 + k, abl, faults=True)
+        assert_trace_reconciles(sim, res)
+        abl_trips += res.trace.count("latch_trip")
+        crashes += res.trace.count("crash")
+        sim, res = run_traced(626300 + k, "adaptive", faults=True)
+        assert_trace_reconciles(sim, res)
+        on_trips += res.trace.count("latch_trip")
+    assert crashes > 0          # the fault half of the audit ran
+    assert abl_trips > 0        # measured: 3 trips across these seeds
+    assert on_trips == 0        # churn relief stands the latch down
 
 
 def test_injected_map_open_jobs_bug_on_mass_loss_is_caught(monkeypatch):

@@ -173,6 +173,15 @@ def build_scenario(rng: random.Random):
     # pre-existing RNG stream — scenario seeds stay comparable across the
     # invariant/chaos suites that pin behaviour per seed range
     spec = dataclasses.replace(spec, tracing=fuzz_trace_config(rng))
+    # the win-aware latch / churn-relief knobs are likewise tail-drawn:
+    # while adaptive.enabled=False they must be inert (the parity suite
+    # proves it), and appending them keeps every earlier draw unshifted
+    spec = dataclasses.replace(spec, adaptive=dataclasses.replace(
+        spec.adaptive,
+        surge_width=round(rng.uniform(0.0, 40.0), 1),
+        crash_discount=rng.random() < 0.5,
+        ewma_gap_cap=round(rng.uniform(0.0, 8.0), 2),
+    ))
     return {
         "spec": spec,
         "jobs": jobs,

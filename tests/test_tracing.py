@@ -15,8 +15,9 @@ import random
 import pytest
 
 from repro.core.policies import PolicySpec
-from repro.core.tracing import (EVENT_KINDS, PARK_GATES, FaultEvent,
-                                TraceBus, dumps_canonical)
+from repro.core.tracing import (EVENT_KINDS, LATCH_RELEASE_CAUSES,
+                                PARK_GATES, FaultEvent, TraceBus,
+                                dumps_canonical)
 from repro.core.types import ClusterSpec, FaultConfig, TraceConfig
 from repro.simcluster.largescale import run_scenario
 from repro.simcluster.sim import ClusterSim
@@ -183,8 +184,7 @@ def test_latch_trip_and_release_events():
     releases = [d for _, k, d in bus.events if k == "latch_release"]
     assert len(releases) > 0
     for d in releases:
-        assert d["cause"] in ("empty_cluster", "cluster_drained",
-                              "maps_drained", "churn_drain")
+        assert d["cause"] in LATCH_RELEASE_CAUSES
 
 
 def test_category_switches_gate_emission():
