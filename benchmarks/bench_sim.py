@@ -209,6 +209,12 @@ def main(argv=None) -> int:
                 "fleet_100x2_churn", seed=args.seed, commit=commit)
 
     results["total_wall_time_s"] = round(time.perf_counter() - t_start, 2)
+    if args.out.exists():
+        # bench_surrogate.py owns the "surrogate" section of the same
+        # file; a scenario re-run must not drop it
+        prior = json.loads(args.out.read_text())
+        if "surrogate" in prior:
+            results["surrogate"] = prior["surrogate"]
     args.out.write_text(json.dumps(results, indent=2) + "\n")
     print(f"[bench] wrote {args.out}")
     for name, r in results["scenarios"].items():

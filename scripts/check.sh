@@ -147,6 +147,16 @@ python -m repro.experiments explain saturated 20x2 \
 rm -rf "$EXPLAIN_CACHE"
 echo "  explain verb exited 0"
 
+echo "== surrogate smoke (calibrated sweep + differential gate on heavy_tail) =="
+# The surrogate verb sweeps the allowlisted 20x2 heavy_tail grid through
+# the batched fluid engine, then re-runs the differential calibration
+# against the event oracle on the pinned seeds and exits 1 on drift.
+# Shares the persistent cache with the adaptive smoke — surrogate cells
+# hash into a disjoint engine namespace, so the two engines coexist.
+python -m repro.experiments surrogate heavy_tail --shape 20x2 \
+    --seeds 0:4 --cache "$ADAPTIVE_SMOKE_CACHE"
+echo "  surrogate smoke passed"
+
 echo "== enabled-tracing overhead bound (tol ${TRACE_TOL}) =="
 python - "$TRACE_TOL" <<'PY'
 import json, sys, time
@@ -202,6 +212,7 @@ PY
 
 echo "== quick sim benchmark =="
 python benchmarks/bench_sim.py --quick --out "$QUICK_OUT"
+python benchmarks/bench_surrogate.py --quick --out "$QUICK_OUT"
 
 echo "== regression check vs committed BENCH_sim.json (tol ${BENCH_TOL}) =="
 python - "$QUICK_OUT" "$BENCH_TOL" <<'PY'
@@ -233,6 +244,18 @@ for name, entry in quick["scenarios"].items():
         if new < floor:
             failures.append(
                 f"{name}/{engine}: {new:.0f} ev/s < floor {floor:.0f}")
+
+sur = quick.get("surrogate")
+base = committed.get("surrogate")
+if sur and base:
+    new = sur["surrogate"]["cells_per_sec"]
+    old = base["surrogate"]["cells_per_sec"]
+    floor = old * (1.0 - tol)
+    status = "ok" if new >= floor else "REGRESSION"
+    print(f"  surrogate: {new:.1f} cells/s vs committed {old:.1f} "
+          f"(floor {floor:.1f}) {status}")
+    if new < floor:
+        failures.append(f"surrogate: {new:.1f} cells/s < floor {floor:.1f}")
 
 if failures:
     print("\nFAIL:")

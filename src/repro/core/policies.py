@@ -153,6 +153,23 @@ def registered_policies() -> Dict[str, Policy]:
     return dict(_REGISTRY)
 
 
+def partition_policies(predicate) -> Tuple[List[str], List[str]]:
+    """Split registered policy names by a predicate over their default
+    ``PolicySpec``: ``(accepted, rejected)``, each in registration order.
+
+    The canonical consumer is engine-capability gating — e.g. the fluid
+    surrogate partitions the registry into policies it can lower and
+    policies that stay oracle-only (``repro.simcluster.surrogate
+    .surrogate_supported``), and its fuzz wall iterates the rejected side
+    asserting every one raises rather than silently approximating."""
+    accepted: List[str] = []
+    rejected: List[str] = []
+    for name in _REGISTRY:
+        (accepted if predicate(PolicySpec.parse(name)) else
+         rejected).append(name)
+    return accepted, rejected
+
+
 # ---------------------------------------------------------------------------
 # the spec
 # ---------------------------------------------------------------------------

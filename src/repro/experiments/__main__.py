@@ -7,6 +7,9 @@ Subcommands::
     run        sweep a (trace x cluster x policy x seeds) grid, cached
     compare    run two policies on the same grid, paired-bootstrap stats
     regimes    fleet-scale preset x cluster-shape atlas (regime report)
+    surrogate  sweep a preset grid through the batched fluid engine
+               (calibrated cells only by default) and print per-policy
+               estimates plus the calibration error vs paired oracle cells
     explain    replay one atlas cell with the decision-trace bus on and
                print a decision-attribution summary (park/latch story)
     paper      reproduce the paper's §5 evaluation and check its claims
@@ -343,6 +346,80 @@ def cmd_policies(args) -> int:
     return 0
 
 
+def cmd_surrogate(args) -> int:
+    from repro.experiments import surrogate as sur_mod
+    from repro.simcluster.surrogate import SurrogateUnsupported
+
+    shape = args.shape
+    if shape not in FLEET_SHAPES:
+        raise SystemExit(f"unknown shape {shape!r}; available: "
+                         f"{', '.join(FLEET_SHAPES)}")
+    if args.presets:
+        pairs = [(p, shape) for p in args.presets]
+        for p, s in pairs:
+            if p not in PRESETS:
+                raise SystemExit(f"unknown preset {p!r}; available: "
+                                 f"{', '.join(sorted(PRESETS))}")
+            if (p, s) not in sur_mod.CALIBRATED and not args.policies:
+                raise SystemExit(
+                    f"({p}, {s}) is not in the calibration allowlist; "
+                    f"pass --policies to sweep uncalibrated estimates "
+                    f"anyway (allowlisted: "
+                    f"{', '.join(f'{k[0]}/{k[1]}' for k in sorted(sur_mod.CALIBRATED))})")
+    else:
+        pairs = [k for k in sorted(sur_mod.CALIBRATED) if k[1] == shape]
+        if not pairs:
+            raise SystemExit(f"no calibrated presets at shape {shape!r}")
+    seeds = _parse_seeds(args.seeds)
+    rc = 0
+    for preset, shp in pairs:
+        allow = sur_mod.CALIBRATED.get((preset, shp), ())
+        pols = tuple(args.policies) if args.policies else allow
+        pols = tuple(p for p in pols if p != "fair")
+        base = regimes_mod.regime_spec(preset, shp, seeds=seeds)
+        spec = ExperimentSpec(name=f"surrogate-{preset}-{shp}",
+                              traces=base.traces, clusters=base.clusters,
+                              schedulers=pols + ("fair",), seeds=seeds)
+        try:
+            rep = sur_mod.run_surrogate(
+                spec, args.cache, progress=print if args.verbose else None)
+        except SurrogateUnsupported as e:
+            raise SystemExit(f"surrogate: {e}")
+        by = rep.by_scheduler()
+        print(f"[{preset}/{shp}] {rep.simulated + rep.cached} surrogate "
+              f"cells ({rep.cached} cached), seeds {seeds[0]}..{seeds[-1]}")
+        print(f"  {'policy':11s} {'tput/h':>7s} {'vs fair':>8s} "
+              f"{'local%':>7s} {'ddl':>6s} calibrated")
+        for pol in pols + ("fair",):
+            recs = by[pol]
+            jph = sum(r.throughput_jph for r in recs) / len(recs)
+            loc = sum(r.locality_rate for r in recs) / len(recs)
+            ddl = sum(r.deadlines_met for r in recs) / len(recs)
+            gain = ("       -" if pol == "fair" else
+                    f"{compare_throughput(by['fair'], recs).mean_gain_pct:+7.1f}%")
+            tag = "yes" if pol in allow else ("-" if pol == "fair"
+                                              else "NO (oracle-only)")
+            print(f"  {pol:11s} {jph:7.1f} {gain:>8s} {loc:7.1%} "
+                  f"{ddl:6.1f} {tag}")
+        if not args.no_calibrate and allow:
+            cal = sur_mod.calibrate(
+                preset, shp, args.cache, workers=args.workers,
+                progress=print if args.verbose else None)
+            print(f"  calibration vs event oracle "
+                  f"(seeds {cal.seeds[0]}..{cal.seeds[-1]}):")
+            for pc in cal.policies:
+                status = "IN" if pc.inside else "OUT"
+                print(f"    {pc.policy:11s} surrogate "
+                      f"{pc.surrogate_gain_pct:+6.1f}% vs oracle CI "
+                      f"[{pc.oracle.ci_lo_pct:+6.1f}%, "
+                      f"{pc.oracle.ci_hi_pct:+6.1f}%]  {status}")
+            if not cal.wall_green:
+                print(f"  CALIBRATION DRIFT: an allowlisted policy left "
+                      f"the oracle CI — rerun tests/test_surrogate.py")
+                rc = 1
+    return rc
+
+
 def cmd_explain(args) -> int:
     from repro.experiments.telemetry import explain_cell
     if args.preset not in PRESETS:
@@ -494,6 +571,30 @@ def main(argv=None) -> int:
                          "(e.g. EXPERIMENTS.md)")
     rg.add_argument("--verbose", action="store_true")
     rg.set_defaults(func=cmd_regimes)
+
+    sg = sub.add_parser(
+        "surrogate",
+        help="batched fluid-engine sweep over calibrated atlas cells, "
+             "with differential calibration vs paired oracle cells")
+    sg.add_argument("presets", nargs="*",
+                    help="presets to sweep (default: every allowlisted "
+                         "preset at --shape)")
+    sg.add_argument("--shape", default="20x2",
+                    help="fleet shape (default: 20x2, the calibrated shape)")
+    sg.add_argument("--seeds", nargs="+", default=["0:8"],
+                    help="sim seeds; accepts `a:b` ranges (default: 0:8)")
+    sg.add_argument("--policies", nargs="*", default=None,
+                    help="override the calibrated policy set (uncalibrated "
+                         "estimates are labeled as such)")
+    sg.add_argument("--cache", type=Path, default=DEFAULT_CACHE,
+                    help=f"shared result cache (default: {DEFAULT_CACHE}); "
+                         "surrogate cells hash into their own namespace")
+    sg.add_argument("--no-calibrate", action="store_true",
+                    help="skip the paired event-oracle calibration pass")
+    sg.add_argument("--workers", type=int, default=0,
+                    help="pool size for the oracle side of calibration")
+    sg.add_argument("--verbose", action="store_true")
+    sg.set_defaults(func=cmd_surrogate)
 
     ex = sub.add_parser("explain",
                         help="replay one atlas cell with tracing on and "

@@ -243,3 +243,26 @@ def test_paper_full_reproduces_claims(tmp_path):
     for w, cmp in report.per_workload.items():
         if w != "permutation":
             assert cmp.mean_gain_pct > 0, (w, cmp.mean_gain_pct)
+
+
+# -- surrogate cache namespace ----------------------------------------------
+
+def test_surrogate_namespace_disjoint_from_event_cache(tmp_path):
+    """A surrogate sweep into a warm event cache neither serves from nor
+    touches the event engine's cells — the engine-id descriptor key forks
+    the hash family, so the two engines coexist in one cache dir."""
+    from repro.experiments.surrogate import run_surrogate, surrogate_hash
+
+    spec = _small_spec()
+    event = run_experiment(spec, tmp_path)
+    assert event.simulated == 4
+    before = {p: p.read_bytes() for p in sorted(tmp_path.rglob("*.json"))}
+    sur = run_surrogate(spec, tmp_path)
+    assert sur.simulated == 4 and sur.cached == 0   # no cross-engine hits
+    for path, blob in before.items():
+        assert path.read_bytes() == blob            # event cells untouched
+    # and back: the event engine still sees its own cells, nothing more
+    again = run_experiment(spec, tmp_path)
+    assert again.simulated == 0 and again.cached == 4
+    for cell in spec.cells():
+        assert surrogate_hash(cell) != cell.cache_hash()

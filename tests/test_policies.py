@@ -168,6 +168,14 @@ def test_cell_hashes_pin_pre_policy_cache_layout():
     hashes = {c.scheduler.label: c.cache_hash() for c in cli.cells()}
     assert hashes == {"proposed": "eee4f777a374ba14",
                       "fair": "ef191f59af9f81d6"}
+    # the surrogate engine's parallel hash family for the same grid —
+    # pinned alongside so the namespaces can drift neither onto each other
+    # nor away from their own caches on disk
+    from repro.experiments.surrogate import surrogate_hash
+    sur = {c.scheduler.label: surrogate_hash(c) for c in cli.cells()}
+    assert sur == {"proposed": "3702536d985edd1e",
+                   "fair": "4de0f7ac0dd18d9b"}
+    assert not set(sur.values()) & set(hashes.values())
 
 
 def test_policy_cache_keys_are_pinned():

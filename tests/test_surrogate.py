@@ -1,0 +1,194 @@
+"""Surrogate engine: the differential calibration wall that pins the fluid
+model to the event oracle, plus property pins on the batched kernel.
+
+The wall is the contract behind ``CALIBRATED``: for every allowlisted
+(preset, shape, policy) the surrogate's policy-vs-fair throughput gain must
+fall inside the event oracle's 95% paired-bootstrap CI on identical
+(trace, seed) cells.  A preset enters the allowlist only by passing here —
+and drifts out loudly, not silently, when either engine changes."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.policies import PolicySpec, partition_policies
+from repro.core.types import ClusterSpec
+from repro.experiments.runner import ExperimentSpec, TraceRef
+from repro.experiments.surrogate import (CALIBRATED, CALIBRATION_SEEDS,
+                                         calibrate, run_surrogate,
+                                         surrogate_descriptor,
+                                         surrogate_hash)
+from repro.simcluster.surrogate import (SURROGATE_ENGINE_ID,
+                                        SurrogateUnsupported, build_cell,
+                                        lower_policy, run_batch, run_cell,
+                                        surrogate_supported)
+from repro.simcluster.traces import PRESETS, generate_trace
+
+_CLUSTER = ClusterSpec(num_machines=6, vms_per_machine=2, replication=1)
+
+
+def _cell(policy="proposed", seed=0, preset="mix_small", trace_seed=0,
+          cluster=_CLUSTER):
+    trace = generate_trace(PRESETS[preset], seed=trace_seed)
+    return build_cell(trace, cluster, policy, seed)
+
+
+def _fingerprint(res):
+    """Every float the RunRecord surface consumes, exact — the comparison
+    basis for all bit-identity pins below."""
+    return (res.makespan, res.jobs_total, res.jobs_finished,
+            res.deadlines_met, res.locality_rate, res.latched_steps,
+            tuple((j.job_id, j.finish_time, j.completion_time,
+                   j.deadline_met, j.local_map_launches,
+                   j.remote_map_launches) for j in res.jobs))
+
+
+# ---------------------------------------------------------------------------
+# the differential calibration wall
+# ---------------------------------------------------------------------------
+
+def test_allowlist_is_pinned():
+    """The calibrated set is a reviewed artifact: growing or shrinking it
+    requires re-running the wall, not editing a dict."""
+    assert CALIBRATED == {
+        ("heavy_tail", "20x2"): ("proposed", "delay", "edf_nopark"),
+        ("diurnal", "20x2"): ("proposed", "delay", "fifo", "edf_nopark"),
+        ("bursty", "20x2"): ("fifo", "edf_nopark"),
+        ("shuffle_heavy", "20x2"): ("delay", "fifo", "edf_nopark"),
+        ("saturated", "20x2"): ("fifo", "edf_nopark"),
+    }
+    assert CALIBRATION_SEEDS == (0, 1, 2, 3)
+
+
+@pytest.mark.parametrize("preset,shape", sorted(CALIBRATED))
+def test_calibration_wall(preset, shape, tmp_path):
+    """Surrogate + oracle on identical (trace, seed) cells; every
+    allowlisted policy's surrogate gain inside the oracle's paired CI."""
+    report = calibrate(preset, shape, tmp_path, workers=4)
+    assert report.seeds == CALIBRATION_SEEDS
+    assert {p.policy for p in report.policies} == set(
+        CALIBRATED[(preset, shape)])
+    for p in report.policies:
+        assert p.allowlisted
+        assert p.inside, (
+            f"{preset}/{shape}/{p.policy}: surrogate gain "
+            f"{p.surrogate_gain_pct:+.2f}% outside oracle CI "
+            f"[{p.oracle.ci_lo_pct:+.2f}, {p.oracle.ci_hi_pct:+.2f}]")
+    assert report.wall_green
+
+
+def test_calibrate_extra_policy_not_allowlisted(tmp_path):
+    """A policy under evaluation reports its differential without joining
+    the gate: wall_green ignores non-allowlisted entries."""
+    report = calibrate("heavy_tail", "20x2", tmp_path, seeds=(0,),
+                       policies=("proposed", "fifo"), workers=4)
+    flags = {p.policy: p.allowlisted for p in report.policies}
+    assert flags == {"proposed": True, "fifo": False}
+
+
+# ---------------------------------------------------------------------------
+# sweep harness: cache behaviour and the lowering gate
+# ---------------------------------------------------------------------------
+
+def _small_spec(schedulers=("proposed", "fair"), seeds=(0, 1)):
+    return ExperimentSpec(
+        name="sur-t", traces=(TraceRef(preset="mix_small", seed=0),),
+        clusters=(_CLUSTER,), schedulers=schedulers, seeds=seeds)
+
+
+def test_surrogate_rerun_hits_cache(tmp_path):
+    first = run_surrogate(_small_spec(), tmp_path)
+    assert first.simulated == 4 and first.cached == 0
+    again = run_surrogate(_small_spec(), tmp_path)
+    assert again.simulated == 0 and again.cached == 4
+    strip = lambda r: {k: v for k, v in r.to_dict().items()
+                       if k != "wall_time_s"}
+    assert [strip(r) for r in first.records] == \
+        [strip(r) for r in again.records]
+
+
+def test_surrogate_descriptor_carries_engine_id(tmp_path):
+    spec = _small_spec(seeds=(0,))
+    run_surrogate(spec, tmp_path)
+    for cell in spec.cells():
+        meta = json.loads(
+            (tmp_path / surrogate_hash(cell) / "meta.json").read_text())
+        assert meta["engine"] == SURROGATE_ENGINE_ID
+        d = surrogate_descriptor(cell)
+        d.pop("engine")
+        assert d == cell.descriptor()
+
+
+def test_unsupported_grid_rejected_before_any_work(tmp_path):
+    spec = _small_spec(schedulers=("proposed", "adaptive"))
+    with pytest.raises(SurrogateUnsupported):
+        run_surrogate(spec, tmp_path)
+    assert list(tmp_path.iterdir()) == []
+
+
+# ---------------------------------------------------------------------------
+# property pins (fuzz tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("policy", ["proposed", "fair", "fifo", "delay",
+                                    "edf_nopark"])
+def test_batch_of_one_matches_run_cell(policy):
+    cell = _cell(policy=policy)
+    assert _fingerprint(run_batch([cell])[0]) == \
+        _fingerprint(run_cell(cell))
+
+
+@pytest.mark.fuzz
+def test_batch_order_and_size_invariance():
+    """Results depend only on each cell's own inputs — never on batch
+    composition.  Mixed presets force mixed padding buckets."""
+    cells = [_cell(policy=p, seed=s, preset=pr)
+             for p, s, pr in [("proposed", 0, "mix_small"),
+                              ("fair", 1, "mix_small"),
+                              ("delay", 2, "heavy_tail"),
+                              ("fifo", 0, "heavy_tail"),
+                              ("edf_nopark", 3, "mix_small"),
+                              ("proposed", 1, "heavy_tail")]]
+    base = [_fingerprint(r) for r in run_batch(cells)]
+    flipped = [_fingerprint(r) for r in run_batch(cells[::-1])][::-1]
+    assert base == flipped
+    chunked = [_fingerprint(r) for chunk in (cells[:2], cells[2:5], cells[5:])
+               for r in run_batch(chunk)]
+    assert base == chunked
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("seed", [0, 7])
+def test_byte_determinism_per_config_seed(seed):
+    """Two fresh integrations of the same (config, seed) — including a
+    fresh XLA trace — agree byte-for-byte on cpu."""
+    import repro.simcluster.surrogate as sg
+    a = _fingerprint(run_cell(_cell(seed=seed)))
+    sg._KERNEL_CACHE.clear()
+    b = _fingerprint(run_cell(_cell(seed=seed)))
+    assert a == b
+
+
+@pytest.mark.fuzz
+def test_seed_and_policy_actually_move_the_result():
+    base = _fingerprint(run_cell(_cell(policy="proposed", seed=0)))
+    assert _fingerprint(run_cell(_cell(policy="proposed", seed=1))) != base
+    assert _fingerprint(run_cell(_cell(policy="fifo", seed=0))) != base
+
+
+@pytest.mark.fuzz
+def test_every_unsupported_registry_policy_raises():
+    """The registry partitions cleanly: adaptive overload EWMAs are the
+    only oracle-only components, and each rejection is typed + attributed
+    rather than a silent approximation."""
+    supported, rejected = partition_policies(surrogate_supported)
+    assert supported == ["proposed", "fair", "fifo", "delay", "edf_nopark"]
+    assert rejected == ["adaptive", "adaptive_ra"]
+    for name in rejected:
+        with pytest.raises(SurrogateUnsupported) as exc:
+            lower_policy(PolicySpec.parse(name))
+        assert exc.value.axis in ("park", "overload")
+        assert exc.value.label == name
+    for name in supported:
+        lower_policy(name)
