@@ -186,6 +186,10 @@ def main(argv=None) -> int:
             results["scenarios"]["fleet_100x2_churn"] = bench_scenario(
                 "fleet_100x2_churn", seed=args.seed, commit=commit,
                 traced=args.traced)
+            print("[bench] fleet_100x2_serving (indexed) ...", flush=True)
+            results["scenarios"]["fleet_100x2_serving"] = bench_scenario(
+                "fleet_100x2_serving", seed=args.seed, commit=commit,
+                traced=args.traced)
         else:
             # the headline comparison: >=100 machines, >=100 jobs, both
             # engines.  The arrival trace is gap-free so the seed engine's
@@ -207,12 +211,18 @@ def main(argv=None) -> int:
                   "does not exist on the seed engine) ...", flush=True)
             results["scenarios"]["fleet_100x2_churn"] = bench_scenario(
                 "fleet_100x2_churn", seed=args.seed, commit=commit)
+            print("[bench] fleet_100x2_serving (indexed; the serving layer "
+                  "does not exist on the seed engine) ...", flush=True)
+            results["scenarios"]["fleet_100x2_serving"] = bench_scenario(
+                "fleet_100x2_serving", seed=args.seed, commit=commit)
 
     results["total_wall_time_s"] = round(time.perf_counter() - t_start, 2)
     if args.out.exists():
         # bench_surrogate.py owns the "surrogate" section of the same
-        # file; a scenario re-run must not drop it
-        prior = json.loads(args.out.read_text())
+        # file; a scenario re-run must not drop it.  An empty file (e.g.
+        # a fresh mktemp target) carries nothing to preserve.
+        prior_text = args.out.read_text()
+        prior = json.loads(prior_text) if prior_text.strip() else {}
         if "surrogate" in prior:
             results["surrogate"] = prior["surrogate"]
     args.out.write_text(json.dumps(results, indent=2) + "\n")

@@ -167,7 +167,8 @@ def main(argv=None) -> int:
 
     # merge into BENCH_sim.json without disturbing the event-engine
     # scenario benchmarks that live alongside
-    doc = json.loads(args.out.read_text()) if args.out.exists() else {}
+    doc_text = args.out.read_text() if args.out.exists() else ""
+    doc = json.loads(doc_text) if doc_text.strip() else {}
     doc["surrogate"] = entry
     args.out.write_text(json.dumps(doc, indent=2) + "\n")
     print(f"[bench] wrote {args.out}")

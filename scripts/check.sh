@@ -123,6 +123,42 @@ print(f"  crashes={res.fault_stats['crashes']} "
       f"{len(res.jobs)} jobs finished; log byte-reproducible")
 PY
 
+echo "== serving smoke (SLO fleet drains; request log reproducible; harvest reconciles) =="
+python - <<'PY'
+import json
+
+from repro.simcluster.largescale import SCENARIOS, run_scenario
+
+res = run_scenario("fleet_100x2_serving", scheduler="harvest", seed=0,
+                   tracing=True)
+unfinished = [j for j, r in res.jobs.items() if r.finish_time is None]
+assert not unfinished, f"batch jobs never finished: {unfinished[:5]}"
+st = res.serve_stats
+assert st["requests"] > 0, "service fleet received no requests"
+bound = SCENARIOS["fleet_100x2_serving"].serve.slo_violation_bound
+assert st["violation_rate"] <= bound, (
+    f"SLO violation rate {st['violation_rate']:.4f} > bound {bound}")
+# harvest events on the trace bus reconcile with the reconfigurator
+# counters and the serving layer's own ledger
+assert res.trace.count("harvest_borrow") == st["harvest_borrows"] \
+    == res.reconfig_stats["harvest_borrows"], "borrow ledgers disagree"
+assert res.trace.count("harvest_return") == st["harvest_returns"] \
+    == res.reconfig_stats["harvest_returns"], "return ledgers disagree"
+assert st["harvest_borrows"] - st["harvest_returns"] \
+    == st["outstanding_borrows"], "harvest ledger leak"
+# request log byte-reproducible across two identical runs
+again = run_scenario("fleet_100x2_serving", scheduler="harvest", seed=0,
+                     tracing=True)
+assert json.dumps(again.serve_log) == json.dumps(res.serve_log), \
+    "serve request log not byte-reproducible"
+assert again.serve_stats == st, "serving stats not reproducible"
+print(f"  requests={st['requests']} shed={st['shed']} "
+      f"p99={st['p99_ms']:.0f}ms viol_rate={st['violation_rate']:.4f} "
+      f"(bound {bound}); harvest {st['harvest_borrows']} borrows / "
+      f"{st['harvest_returns']} returns — ledgers reconcile, "
+      f"log byte-reproducible")
+PY
+
 echo "== trace smoke (traced churn run byte-reproducible; explain exits 0) =="
 python - <<'PY'
 from repro.simcluster.largescale import run_scenario

@@ -54,11 +54,17 @@ class PolicyError(ValueError):
 # registry
 # ---------------------------------------------------------------------------
 
-#: the component axes every registration must declare, and their vocabulary
+#: the component axes every registration must declare, and their vocabulary.
+#: Axes whose vocabulary includes "off" may be omitted from a registration
+#: and default to "off" — adding a new axis must not break existing
+#: registrations (the ``harvest`` axis arrived after the presets).
 COMPONENT_AXES: Dict[str, Tuple[str, ...]] = {
     "ordering": ("edf", "fair_deficit", "fifo"),
     "park": ("off", "fixed", "adaptive"),
     "overload": ("none", "latch", "reduce_aware"),
+    # Borg-style service-core harvesting (repro.simcluster.serving): off,
+    # or utilization-EWMA borrowing against ServeConfig's headroom bar
+    "harvest": ("off", "ewma"),
 }
 
 
@@ -121,8 +127,12 @@ def register_policy(name: str, *, description: str,
                     defaults: Optional[Mapping[str, object]] = None,
                     legacy_builder: Optional[Callable] = None):
     """Decorator registering ``fn(cluster, params) -> scheduler`` under
-    ``name``.  ``components`` must cover every axis in ``COMPONENT_AXES``."""
+    ``name``.  ``components`` must cover every axis in ``COMPONENT_AXES``
+    (axes with an "off" value may be omitted and default to it)."""
+    components = dict(components)
     for axis, vocab in COMPONENT_AXES.items():
+        if axis not in components and "off" in vocab:
+            components[axis] = "off"
         if components.get(axis) not in vocab:
             raise PolicyError(
                 f"policy {name!r}: component {axis!r} must be one of "
@@ -404,6 +414,28 @@ def _build_adaptive_ra(cluster: ClusterSpec, p: Dict[str, object]):
     return CompletionTimeScheduler(
         cluster, Reconfigurator(cluster, max_wait=p["max_wait"]),
         park_depth=p["park_depth"], overload="reduce_aware")
+
+
+@register_policy(
+    "harvest",
+    description="Adaptive policy plus Borg-style service-core harvesting: "
+                "with ServeConfig active, idle service cores (utilization "
+                "EWMA under the headroom bar) are lent to the batch side "
+                "to plug parked maps and returned preemptively on load "
+                "spikes before the p99 SLO is breached.  Identical to "
+                "`adaptive` when serving is off.",
+    components={"ordering": "edf", "park": "adaptive", "overload": "latch",
+                "harvest": "ewma"},
+    defaults={"max_wait": 30.0, "park_depth": 2, **_ADAPTIVE_PARAM_KNOBS})
+def _build_harvest(cluster: ClusterSpec, p: Dict[str, object]):
+    from repro.core.reconfigurator import Reconfigurator
+    from repro.core.scheduler import CompletionTimeScheduler
+    cluster = _adaptive_cluster(cluster, p)
+    sched = CompletionTimeScheduler(
+        cluster, Reconfigurator(cluster, max_wait=p["max_wait"]),
+        park_depth=p["park_depth"], overload="latch")
+    sched.harvest = True
+    return sched
 
 
 @register_policy(

@@ -112,7 +112,8 @@ class Reconfigurator:
         self.stats = {"reconfigurations": 0, "parked": 0, "expired": 0,
                       "total_wait": 0.0, "park_declined": 0,
                       "park_wins": 0, "park_losses": 0, "park_crashed": 0,
-                      "park_crash_discounted": 0}
+                      "park_crash_discounted": 0,
+                      "harvest_borrows": 0, "harvest_returns": 0}
         # machines with a non-empty AQ / RQ, so match() touches only
         # machines that can possibly pair instead of sweeping all of them
         self._aq_nonempty: Set[int] = set()
@@ -307,6 +308,39 @@ class Reconfigurator:
         self.last_free[machine] = None
         self.fail_streak[machine] = 0
         self.last_fail[machine] = None
+
+    # -- Borg-style harvesting (ServeConfig; policy axis `harvest`) ----------
+    # The serving layer owns the borrow/return *decisions* (utilization
+    # EWMA vs the headroom bar, preemptive return on load spikes or churn
+    # relief); the reconfigurator owns the *accounting* — the counters the
+    # trace-bus harvest events reconcile against in the invariant audit.
+    # Borrowed cores never move through vcpus/in_flight: a loan shrinks
+    # the service's pinned reservation on its own VM (raising that VM's
+    # map capacity in the engine), so total_vcpus conservation is exact.
+
+    def harvest_borrow(self, now: float, *, machine: int, node: int,
+                       service: str, replica: int, signal: str,
+                       util: float, cores_left: int) -> None:
+        """One service core lent to the batch side (``signal`` names the
+        trigger: parked_demand / map_backlog)."""
+        self.stats["harvest_borrows"] += 1
+        if self.trace is not None and self.trace.serve:
+            self.trace.emit(now, "harvest_borrow", {
+                "machine": machine, "node": node, "service": service,
+                "replica": replica, "signal": signal, "util": util,
+                "cores_left": cores_left})
+
+    def harvest_return(self, now: float, *, machine: int, node: int,
+                       service: str, replica: int, signal: str,
+                       util: float, cores_left: int) -> None:
+        """A borrowed core returned to its service (``signal`` names the
+        trigger: util_spike / p99_pressure / churn_relief / machine_down)."""
+        self.stats["harvest_returns"] += 1
+        if self.trace is not None and self.trace.serve:
+            self.trace.emit(now, "harvest_return", {
+                "machine": machine, "node": node, "service": service,
+                "replica": replica, "signal": signal, "util": util,
+                "cores_left": cores_left})
 
     # -- matching ------------------------------------------------------------
     def match(self, now: float, donor_ok=None) -> List[PendingPlug]:

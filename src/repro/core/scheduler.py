@@ -64,6 +64,12 @@ class SchedulerBase:
     uses_reconfig = False
     # set by PolicySpec.build: the spec this instance was constructed from
     policy = None
+    # harvest policy component (repro.core.policies axis "harvest"): when
+    # True and ServeConfig is active, the serving layer borrows idle
+    # service cores for the batch side (repro.simcluster.serving).  Set by
+    # harvest-policy builders; read-only for the engine, so non-harvest
+    # policies are untouched.
+    harvest = False
     # decision-trace bus (repro.core.tracing.TraceBus); attached by the
     # simulator when ClusterSpec.tracing is enabled, None otherwise.  Every
     # emission site is behind a single `is None` guard and draws from no

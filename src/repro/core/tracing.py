@@ -85,6 +85,17 @@ PARK_OUTCOME_CAUSES: Tuple[str, ...] = (
                           # (every live replica down) — gates not charged
 )
 
+# Signals a harvest_borrow / harvest_return record can carry (serving
+# layer decision loop; see repro.simcluster.serving).
+HARVEST_SIGNALS: Tuple[str, ...] = (
+    "parked_demand",      # borrow: parked maps wait on this machine's AQ
+    "map_backlog",        # borrow: cluster-wide pending maps, util is low
+    "util_spike",         # return: utilization EWMA over the return bar
+    "p99_pressure",       # return: tick p99 reached the SLO — preempt
+    "churn_relief",       # return: harvesting stands down under churn
+    "machine_down",       # return: the host machine crashed
+)
+
 # Every record kind the bus can carry, grouped by TraceConfig switch.
 EVENT_KINDS: Dict[str, Tuple[str, ...]] = {
     "launches": ("job_submit", "job_finish", "launch", "finish", "kill"),
@@ -92,6 +103,7 @@ EVENT_KINDS: Dict[str, Tuple[str, ...]] = {
               "unpark", "park_expired", "park_crashed"),
     "overload": ("latch_trip", "latch_release"),
     "faults": ("crash", "restart", "burst", "rereplicate"),
+    "serve": ("serve_tick", "harvest_borrow", "harvest_return"),
     "pressure": ("pressure",),
 }
 
@@ -112,7 +124,7 @@ class TraceBus:
     """
 
     __slots__ = ("config", "launches", "parks", "overload", "faults",
-                 "pressure_every", "max_events", "events", "counts",
+                 "serve", "pressure_every", "max_events", "events", "counts",
                  "dropped")
 
     def __init__(self, config: TraceConfig) -> None:
@@ -123,6 +135,7 @@ class TraceBus:
         self.parks = config.parks
         self.overload = config.overload
         self.faults = config.faults
+        self.serve = config.serve
         self.pressure_every = config.pressure_every
         self.max_events = config.max_events
         self.events: List[Tuple[float, str, Dict[str, object]]] = []

@@ -529,6 +529,145 @@ def _class_pattern(classes: Tuple[MachineClass, ...]
 
 
 @dataclass(frozen=True)
+class ServiceSpec:
+    """One long-lived latency-sensitive service co-located with the batch
+    workload.
+
+    Each replica pins ``vcpus`` cores on one VM (replicas are spread over
+    the fleet round-robin) and receives an open-arrival request stream —
+    a non-homogeneous Poisson process with the same diurnal/flash-crowd
+    shape as ``repro.simcluster.traces.ArrivalConfig``, drawn from a
+    dedicated per-replica RNG stream (zero draws from the decision RNG).
+
+    Attributes:
+      name: service label (also part of the RNG stream key).
+      replicas: service instances; each lives on one VM.
+      vcpus: cores pinned per replica (the batch side loses this much map
+        capacity on the host VM; harvesting may borrow all but one back).
+      base_rps: mean request arrival rate per replica (requests/second).
+      diurnal_amplitude/diurnal_period/diurnal_phase: sinusoidal load
+        modulation, ``rate(t) = base_rps * (1 + A sin(2 pi (t+phase)/T))``.
+      burst_prob: per base arrival, chance of a flash crowd riding on it.
+      burst_size_mean: mean extra requests per flash crowd (geometric).
+      burst_stagger: mean spacing (s) of flash-crowd arrivals.
+      service_time: mean seconds one request occupies one core (exponential).
+      slo_p99_ms: per-request latency SLO; a request whose sojourn exceeds
+        this counts as an SLO violation.
+    """
+
+    name: str = "svc"
+    replicas: int = 2
+    vcpus: int = 1
+    base_rps: float = 10.0
+    diurnal_amplitude: float = 0.0
+    diurnal_period: float = 3600.0
+    diurnal_phase: float = 0.0
+    burst_prob: float = 0.0
+    burst_size_mean: float = 8.0
+    burst_stagger: float = 0.05
+    service_time: float = 0.02
+    slo_p99_ms: float = 250.0
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            raise ValueError("service name must be non-empty")
+        if self.replicas < 1:
+            raise ValueError("service replicas must be >= 1")
+        if self.vcpus < 1:
+            raise ValueError("service vcpus must be >= 1")
+        if self.base_rps <= 0:
+            raise ValueError("base_rps must be positive")
+        if not 0.0 <= self.diurnal_amplitude < 1.0:
+            raise ValueError("diurnal_amplitude must be in [0, 1)")
+        if self.diurnal_period <= 0:
+            raise ValueError("diurnal_period must be positive")
+        if not 0.0 <= self.burst_prob < 1.0:
+            raise ValueError("burst_prob must be in [0, 1)")
+        if self.burst_size_mean < 1.0:
+            raise ValueError("burst_size_mean must be >= 1")
+        if self.burst_stagger <= 0:
+            raise ValueError("burst_stagger must be positive")
+        if self.service_time <= 0:
+            raise ValueError("service_time must be positive")
+        if self.slo_p99_ms <= 0:
+            raise ValueError("slo_p99_ms must be positive")
+
+    def to_dict(self) -> Dict[str, object]:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "ServiceSpec":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Multi-tenant serving layer: latency-SLO services co-located with
+    the batch MapReduce workload on one reconfigurable fleet.
+
+    Default **off** — with ``enabled=False`` (or no services) the layer is
+    never constructed, zero RNG draws happen, the engine stays bit-exact
+    against the frozen legacy engine (the parity fuzz suite carries
+    disabled-but-wild serving knobs through the sweep), and the config is
+    omitted from ``ClusterSpec.to_dict`` so every sweep-cache hash and
+    pair key is untouched — exactly like ``FaultConfig``/``TraceConfig``.
+
+    When active, ``ClusterSim`` pins each replica's vcpus on its host VM
+    (reducing batch map capacity there), drives per-replica request
+    streams from dedicated ``f"{seed}:serve:{service}:{replica}"`` RNG
+    streams, and folds per-request queueing into p50/p99 latency and
+    SLO-violation counters each serve tick.  The harvest knobs govern the
+    Borg-style core-harvesting component (``PolicySpec`` axis
+    ``harvest``): a replica whose utilization EWMA sits below
+    ``harvest_headroom`` may lend all but one pinned core to the batch
+    side; cores are returned preemptively when the EWMA crosses
+    ``harvest_return_util`` or the tick's p99 reaches the SLO.
+    """
+
+    enabled: bool = False
+    services: Tuple[ServiceSpec, ...] = ()
+    # -- harvest component knobs (inert unless the policy enables it) -----
+    harvest_headroom: float = 0.55     # borrow only below this util EWMA
+    harvest_return_util: float = 0.85  # return preemptively above this
+    harvest_util_alpha: float = 0.3    # utilization EWMA weight
+    # atlas guard: max tolerated fraction of requests over their p99 SLO
+    slo_violation_bound: float = 0.02
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.harvest_headroom < 1.0:
+            raise ValueError("harvest_headroom must be in (0, 1)")
+        if self.harvest_return_util <= self.harvest_headroom:
+            raise ValueError("harvest_return_util must be > harvest_headroom")
+        if not 0.0 < self.harvest_util_alpha <= 1.0:
+            raise ValueError("harvest_util_alpha must be in (0, 1]")
+        if not 0.0 <= self.slo_violation_bound <= 1.0:
+            raise ValueError("slo_violation_bound must be in [0, 1]")
+        if not isinstance(self.services, tuple):
+            object.__setattr__(self, "services", tuple(self.services))
+        names = [s.name for s in self.services]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate service names: {names}")
+
+    @property
+    def active(self) -> bool:
+        """Any service actually running (vs. enabled-but-empty)."""
+        return self.enabled and bool(self.services)
+
+    def to_dict(self) -> Dict[str, object]:
+        d = asdict(self)
+        d["services"] = [asdict(s) for s in self.services]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "ServeConfig":
+        d = dict(d)
+        d["services"] = tuple(
+            ServiceSpec.from_dict(s) if isinstance(s, dict) else s
+            for s in d.get("services", ()))
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class TraceConfig:
     """Decision-trace bus configuration (``repro.core.tracing``).
 
@@ -565,6 +704,9 @@ class TraceConfig:
     parks: bool = True
     overload: bool = True
     faults: bool = True
+    # serving/harvest records: ``harvest_borrow``/``harvest_return`` (with
+    # the triggering signal named) plus per-tick ``serve_tick`` snapshots
+    serve: bool = True
     pressure_every: float = 0.0
     max_events: int = 1_000_000
 
@@ -601,6 +743,7 @@ class ClusterSpec:
     remote_penalty_scale: float = 1.0
     adaptive: AdaptiveConfig = AdaptiveConfig()
     faults: FaultConfig = FaultConfig()
+    serve: ServeConfig = ServeConfig()
     tracing: TraceConfig = TraceConfig()
 
     @property
@@ -627,6 +770,11 @@ class ClusterSpec:
             del d["faults"]
         else:
             d["faults"] = self.faults.to_dict()
+        if self.serve == ServeConfig():
+            # same contract for the serving layer: serving-off is invisible
+            del d["serve"]
+        else:
+            d["serve"] = self.serve.to_dict()
         # tracing is a pure observer: results are bit-identical with it
         # on or off, so it is *always* omitted — a traced replay of a
         # cached cell must hash onto the same cache entry
@@ -649,6 +797,8 @@ class ClusterSpec:
             d["adaptive"] = AdaptiveConfig.from_dict(d["adaptive"])
         if isinstance(d.get("faults"), dict):
             d["faults"] = FaultConfig.from_dict(d["faults"])
+        if isinstance(d.get("serve"), dict):
+            d["serve"] = ServeConfig.from_dict(d["serve"])
         if isinstance(d.get("tracing"), dict):
             d["tracing"] = TraceConfig.from_dict(d["tracing"])
         return cls(**d)

@@ -16,6 +16,7 @@ Subcommands::
     policies   list the registered scheduler policies (--smoke: run each
                on a tiny cluster and flag stranded work)
     faults     list the named fault-injection profiles (--faults values)
+    serve      list the named serving profiles (--serve values)
 
 Scheduler arguments accept either a registered policy name (``proposed``,
 ``adaptive``, ``adaptive_ra``, ``delay``, ``fair``, ``fifo``, ...) or an
@@ -98,6 +99,23 @@ def _parse_faults(token):
         f"({', '.join(regimes_mod.FAULT_PROFILES)}) or FaultConfig JSON")
 
 
+def _parse_serve(token, machines: int):
+    """A --serve CLI token: named profile from ``SERVE_PROFILES`` (scaled
+    to the cluster's machine count) or an inline ``ServeConfig`` JSON."""
+    from repro.core.types import ServeConfig
+    if token in regimes_mod.SERVE_PROFILES:
+        return regimes_mod.serve_profile(token, machines)
+    if token.lstrip().startswith("{"):
+        import json
+        try:
+            return ServeConfig.from_dict(json.loads(token))
+        except (ValueError, TypeError) as e:
+            raise SystemExit(f"bad serve config {token!r}: {e}")
+    raise SystemExit(
+        f"bad --serve {token!r}: expected a profile name "
+        f"({', '.join(regimes_mod.SERVE_PROFILES)}) or ServeConfig JSON")
+
+
 def _cluster_from_args(args) -> ClusterSpec:
     spec = ClusterSpec(num_machines=args.machines,
                        vms_per_machine=args.vms,
@@ -105,6 +123,9 @@ def _cluster_from_args(args) -> ClusterSpec:
                        remote_penalty_scale=args.remote_penalty_scale)
     if getattr(args, "faults", None):
         spec = dataclasses.replace(spec, faults=_parse_faults(args.faults))
+    if getattr(args, "serve", None):
+        spec = dataclasses.replace(
+            spec, serve=_parse_serve(args.serve, args.machines))
     return spec
 
 
@@ -137,6 +158,10 @@ def _add_grid_args(p: argparse.ArgumentParser) -> None:
                    help="fault-injection profile (churn_lo, churn_hi, "
                         "churn_hetero) or inline FaultConfig JSON, e.g. "
                         '\'{"enabled": true, "crash_mtbf": 1800}\'')
+    p.add_argument("--serve", default=None,
+                   help="co-located serving profile ("
+                        + ", ".join(regimes_mod.SERVE_PROFILES)
+                        + ") or inline ServeConfig JSON (see `serve --list`)")
     p.add_argument("--cache", type=Path, default=DEFAULT_CACHE,
                    help=f"result cache directory (default: {DEFAULT_CACHE})")
     p.add_argument("--workers", type=int, default=0,
@@ -226,6 +251,12 @@ def cmd_regimes(args) -> int:
         if sw not in regimes_mod.SWIM_TRACES:
             raise SystemExit(f"unknown SWIM trace {sw!r}; available: "
                              f"{', '.join(regimes_mod.SWIM_TRACES)}")
+    serve = tuple(args.serve) if args.serve is not None else (
+        regimes_mod.QUICK_SERVE if args.quick else regimes_mod.FULL_SERVE)
+    for sp in serve:
+        if sp not in regimes_mod.SERVE_PROFILES:
+            raise SystemExit(f"unknown serve profile {sp!r}; available: "
+                             f"{', '.join(regimes_mod.SERVE_PROFILES)}")
     report = regimes_mod.run_regimes(
         presets, shapes, seeds, args.cache, fabrics=fabrics,
         replications=replications, faults=faults, swim=swim,
@@ -239,11 +270,27 @@ def cmd_regimes(args) -> int:
         md.parent.mkdir(parents=True, exist_ok=True)
         _write_markdown_table(md, report.to_markdown())
         print(f"markdown table -> {md}")
+    if serve:
+        serve_shapes = tuple(s for s in regimes_mod.SERVE_SHAPES
+                             if s in shapes) or (shapes[0],)
+        sreport = regimes_mod.run_serve_regimes(
+            serve, serve_shapes, seeds, args.cache, workers=args.workers,
+            progress=print if args.verbose else None)
+        sout = sreport.save_json(args.serve_out)
+        print(sreport.format())
+        print(f"serve report -> {sout}")
+        if args.markdown is not None:
+            _write_marked_section(Path(args.markdown),
+                                  sreport.to_markdown(),
+                                  SERVE_TABLE_START, SERVE_TABLE_END)
+            print(f"serve markdown table -> {args.markdown}")
     return 0
 
 
 MD_TABLE_START = "<!-- regimes:table:start"
 MD_TABLE_END = "<!-- regimes:table:end -->"
+SERVE_TABLE_START = "<!-- serve:table:start"
+SERVE_TABLE_END = "<!-- serve:table:end -->"
 
 
 def _write_markdown_table(md: Path, table: str) -> None:
@@ -260,6 +307,25 @@ def _write_markdown_table(md: Path, table: str) -> None:
             md.write_text(head + table + "\n" + text[end:])
             return
     md.write_text(table + "\n")
+
+
+def _write_marked_section(md: Path, table: str, start: str,
+                          end: str) -> None:
+    """Replace (or append) a marker-delimited table in ``md`` without
+    touching anything outside the markers — the serving table lives in
+    the same EXPERIMENTS.md as the regime table, so a missing-marker
+    fallback must append a new marked section, never clobber the file."""
+    if md.exists():
+        text = md.read_text()
+        s, e = text.find(start), text.find(end)
+        if s != -1 and e != -1 and e > s:
+            head = text[:text.index("\n", s) + 1]       # keep the marker line
+            md.write_text(head + table + "\n" + text[e:])
+            return
+        md.write_text(text.rstrip("\n")
+                      + f"\n\n{start} -->\n{table}\n{end}\n")
+        return
+    md.write_text(f"{start} -->\n{table}\n{end}\n")
 
 
 def _print_records(report) -> None:
@@ -326,12 +392,13 @@ def cmd_compare(args) -> int:
 
 def cmd_policies(args) -> int:
     print(f"{'policy':12s} {'ordering':13s} {'park':9s} {'overload':13s} "
-          f"parameters")
+          f"{'harvest':8s} parameters")
     for name, pol in registered_policies().items():
         params = ", ".join(f"{k}={v}" for k, v in sorted(pol.defaults.items()))
         c = pol.components
         print(f"{name:12s} {c['ordering']:13s} {c['park']:9s} "
-              f"{c['overload']:13s} {params or '-'}")
+              f"{c['overload']:13s} {c.get('harvest', 'off'):8s} "
+              f"{params or '-'}")
         if args.verbose:
             print(f"             {pol.description}")
     if args.smoke:
@@ -465,6 +532,30 @@ def cmd_faults(args) -> int:
     return 0
 
 
+def cmd_serve(args) -> int:
+    if not args.list:
+        raise SystemExit("serve: nothing to do (did you mean --list?)")
+    machines = args.machines
+    print(f"serving profiles at {machines} machines (replicas scale with "
+          f"the fleet; pass a name to --serve on run/compare/regimes):")
+    print(f"{'profile':16s} {'svc':5s} {'repl':>4s} {'vcpus':>5s} "
+          f"{'rps':>5s} {'diurnal':>7s} {'burst':>5s} {'svc_ms':>6s} "
+          f"{'slo_p99':>8s} {'bound':>6s}")
+    for name in regimes_mod.SERVE_PROFILES:
+        cfg = regimes_mod.serve_profile(name, machines)
+        for svc in cfg.services:
+            print(f"{name:16s} {svc.name:5s} {svc.replicas:4d} "
+                  f"{svc.vcpus:5d} {svc.base_rps:5.0f} "
+                  f"{svc.diurnal_amplitude:7.2f} {svc.burst_prob:5.2f} "
+                  f"{svc.service_time * 1000:6.0f} "
+                  f"{svc.slo_p99_ms:6.0f}ms {cfg.slo_violation_bound:6.2f}")
+    print("harvest policy: `harvest` (= adaptive + the ewma harvest "
+          "component); borrow under util EWMA "
+          "< harvest_headroom, preemptive return past harvest_return_util "
+          "or at the tick p99 SLO")
+    return 0
+
+
 def cmd_paper(args) -> int:
     seeds = (QUICK_SEEDS if args.quick else FULL_SEEDS)
     if args.seeds is not None:
@@ -561,6 +652,16 @@ def main(argv=None) -> int:
                     help="committed SWIM trace columns on the first shape: "
                          + ", ".join(regimes_mod.SWIM_TRACES)
                          + f" (full default: {regimes_mod.FULL_SWIM})")
+    rg.add_argument("--serve", nargs="*", default=None,
+                    help="serving profiles swept over the serve shapes "
+                         f"({', '.join(regimes_mod.SERVE_SHAPES)}), pairing "
+                         "harvest vs adaptive: "
+                         + ", ".join(regimes_mod.SERVE_PROFILES)
+                         + " (full default: all; quick default: none)")
+    rg.add_argument("--serve-out", type=Path,
+                    default=Path("serve_regimes.json"),
+                    help="machine-readable serving report (default: "
+                         "serve_regimes.json)")
     rg.add_argument("--cache", type=Path, default=DEFAULT_CACHE)
     rg.add_argument("--workers", type=int, default=0)
     rg.add_argument("--out", type=Path, default=Path("regimes.json"),
@@ -630,6 +731,15 @@ def main(argv=None) -> int:
     fl.add_argument("--list", action="store_true",
                     help="list the named profiles and their knobs")
     fl.set_defaults(func=cmd_faults)
+
+    sv = sub.add_parser("serve",
+                        help="serving profiles accepted by --serve")
+    sv.add_argument("--list", action="store_true",
+                    help="list the named profiles and their knobs")
+    sv.add_argument("--machines", type=int, default=20,
+                    help="fleet size to scale replica counts for "
+                         "(default: 20)")
+    sv.set_defaults(func=cmd_serve)
 
     pl = sub.add_parser("policies",
                         help="list registered scheduler policies "

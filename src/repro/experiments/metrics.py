@@ -64,6 +64,9 @@ class RunRecord:
     # None on records written before the policy API existed (their
     # ``scheduler`` string is the preset name, which parses to the spec)
     policy: Optional[Dict[str, object]] = None
+    # SimResult.serve_stats (latency/SLO/harvest fold); empty when the
+    # run had no serving layer, so pre-serving records load unchanged
+    serve: Dict[str, object] = field(default_factory=dict)
     version: int = RECORD_VERSION
 
     # -- identity -----------------------------------------------------------
@@ -161,4 +164,5 @@ def run_record_from_result(result: SimResult, *, trace: Trace,
         reconfig_stats=dict(result.reconfig_stats),
         jobs=jobs,
         policy=policy,
+        serve=dict(result.serve_stats),
     )

@@ -35,9 +35,11 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Sequence, Tuple, Union
 
-from repro.core.types import FaultConfig, MachineClass
+from repro.core.types import (FaultConfig, MachineClass, ServeConfig,
+                              ServiceSpec)
 from repro.experiments.runner import ExperimentSpec, TraceRef, run_experiment
-from repro.experiments.stats import PairedComparison, compare_throughput
+from repro.experiments.stats import (PairedComparison, compare_serve_p99,
+                                     compare_throughput)
 from repro.simcluster.largescale import FLEET_SHAPES, fleet_shape
 from repro.simcluster.traces import PRESETS, Trace
 
@@ -91,6 +93,56 @@ BASE_FAULTS = "none"
 FULL_FAULTS: Tuple[str, ...] = ("churn_lo", "churn_hi", "churn_hetero")
 QUICK_FAULTS: Tuple[str, ...] = ()
 FAULT_SHAPES: Tuple[str, ...] = ("20x2", "50x2")
+# serving axis: co-located latency-SLO services (ServeConfig) crossed with
+# the batch atlas — service:batch core mix x SLO tightness x spike
+# amplitude, each cell pairing the `harvest` policy against its no-harvest
+# `adaptive` twin on identical inputs.  Replica counts scale with the
+# fleet (4 per 20 machines); 2-vCPU replicas pin a whole VM, so the
+# harvest question is "how much pinned capacity can the batch side
+# recover without breaching the p99 SLO?"
+_SERVE_BASES: Dict[str, ServiceSpec] = {
+    # 1-core replicas: nothing harvestable (a replica keeps its last
+    # core) — the control cell where harvest must equal adaptive
+    "svc_light_loose": ServiceSpec(name="web", vcpus=1, base_rps=12.0,
+                                   diurnal_amplitude=0.3,
+                                   slo_p99_ms=500.0),
+    # 2-core replicas at low utilization with a loose SLO: the
+    # harvest-win cell (idle pinned cores, headroom to lend)
+    "svc_heavy_loose": ServiceSpec(name="api", vcpus=2, base_rps=15.0,
+                                   diurnal_amplitude=0.3,
+                                   slo_p99_ms=600.0),
+    # 2-core replicas near the knee with a tight SLO: borrowing pushes
+    # p99 toward the bar, so preemptive returns must do the work
+    "svc_heavy_tight": ServiceSpec(name="api", vcpus=2, base_rps=35.0,
+                                   diurnal_amplitude=0.2,
+                                   slo_p99_ms=300.0),
+    # flash-crowd riders on a quiet baseline: load spikes arrive faster
+    # than the diurnal EWMA drifts — exercises util_spike/p99_pressure
+    "svc_spiky": ServiceSpec(name="feed", vcpus=2, base_rps=10.0,
+                             diurnal_amplitude=0.2, burst_prob=0.05,
+                             burst_size_mean=12.0, slo_p99_ms=500.0),
+}
+SERVE_PROFILES: Tuple[str, ...] = tuple(_SERVE_BASES)
+SERVE_SHAPES: Tuple[str, ...] = ("20x2", "50x2")
+FULL_SERVE: Tuple[str, ...] = SERVE_PROFILES
+QUICK_SERVE: Tuple[str, ...] = ()
+# the serving cells pair the harvest column against its no-harvest twin
+SERVE_SCHEDULERS: Tuple[str, ...] = ("adaptive", "harvest")
+# batch workload under the services: the saturated closed mix keeps a
+# standing map backlog, so harvested cores always have work to absorb
+SERVE_PRESET = "saturated"
+
+
+def serve_profile(name: str, machines: int) -> ServeConfig:
+    """The named serving profile scaled to a fleet: replica count grows
+    with the machine count (4 per 20 machines, minimum 2)."""
+    if name not in _SERVE_BASES:
+        raise ValueError(f"unknown serve profile {name!r}; available: "
+                         f"{', '.join(_SERVE_BASES)}")
+    base = _SERVE_BASES[name]
+    replicas = max(2, round(4 * machines / 20))
+    return ServeConfig(enabled=True, services=(
+        dataclasses.replace(base, replicas=replicas),))
 # real-trace columns: imported SWIM/Facebook-format cluster logs committed
 # as repro-trace/v1 fixtures (see data/swim_fb_sample.log for the raw log
 # and the import provenance).  Path traces hash their file bytes into the
@@ -471,3 +523,224 @@ def run_regimes(presets: Sequence[str] = REGIME_PRESETS,
                         fault_profiles=(BASE_FAULTS,) + tuple(
                             fp for fp in faults if fp != BASE_FAULTS),
                         swim=tuple(swim))
+
+
+# -- serving axis -------------------------------------------------------------
+
+def serve_spec(profile: str, shape: str,
+               seeds: Sequence[int] = FULL_SEEDS,
+               preset: str = SERVE_PRESET) -> ExperimentSpec:
+    """One serving cell as a sweep spec: the scaled batch trace plus the
+    scaled service fleet, run under both ``SERVE_SCHEDULERS`` on identical
+    inputs.  The serve config enters the cluster descriptor (and so the
+    cache hash) — serving cells never collide with batch-only cells."""
+    machines, _ = FLEET_SHAPES[shape]
+    config = dataclasses.replace(PRESETS[preset],
+                                 num_jobs=scaled_jobs(preset, machines))
+    cluster = dataclasses.replace(fleet_shape(shape),
+                                  serve=serve_profile(profile, machines))
+    return ExperimentSpec(
+        name=f"serve-{preset}-{shape}-{profile}",
+        traces=(TraceRef(config=config),),
+        clusters=(cluster,),
+        schedulers=SERVE_SCHEDULERS,
+        seeds=tuple(seeds),
+    )
+
+
+@dataclass
+class ServeCell:
+    """Verdict for one (serving profile, cluster shape) point: how much
+    batch throughput does harvesting recover, and what does it cost the
+    services' tail latency / SLO budget?"""
+
+    profile: str
+    shape: str
+    machines: int
+    vms: int
+    num_jobs: int
+    seeds: Tuple[int, ...]
+    slo_bound: float                     # ServeConfig.slo_violation_bound
+    throughput: PairedComparison         # harvest-vs-adaptive batch jph
+    p99: PairedComparison                # serving p99 delta (lower better)
+    violation_rate: Dict[str, float]     # mean SLO-violation rate per sched
+    mean_p99_ms: Dict[str, float]
+    mean_makespan: Dict[str, float]
+    harvest_borrows: float               # mean per harvest run
+    harvest_returns: float
+
+    def verdict(self) -> str:
+        return _verdict_of(self.throughput)
+
+    def slo_ok(self) -> bool:
+        """Every scheduler held the whole-run SLO-violation bound."""
+        return all(v <= self.slo_bound + 1e-12
+                   for v in self.violation_rate.values())
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "profile": self.profile,
+            "shape": self.shape,
+            "machines": self.machines,
+            "vms": self.vms,
+            "num_jobs": self.num_jobs,
+            "seeds": list(self.seeds),
+            "slo_bound": self.slo_bound,
+            "verdict": self.verdict(),
+            "slo_ok": self.slo_ok(),
+            "throughput_harvest_vs_adaptive": self.throughput.to_dict(),
+            "serve_p99_harvest_vs_adaptive": self.p99.to_dict(),
+            "violation_rate": self.violation_rate,
+            "mean_p99_ms": self.mean_p99_ms,
+            "mean_makespan": self.mean_makespan,
+            "harvest_borrows": self.harvest_borrows,
+            "harvest_returns": self.harvest_returns,
+        }
+
+
+@dataclass
+class ServeReport:
+    preset: str
+    profiles: Tuple[str, ...]
+    shapes: Tuple[str, ...]
+    seeds: Tuple[int, ...]
+    cells: List[ServeCell]
+    simulated: int
+    cached: int
+    version: int = REPORT_VERSION
+
+    def cell(self, profile: str, shape: str) -> ServeCell:
+        for c in self.cells:
+            if (c.profile, c.shape) == (profile, shape):
+                return c
+        raise KeyError((profile, shape))
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "version": self.version,
+            "preset": self.preset,
+            "profiles": list(self.profiles),
+            "shapes": list(self.shapes),
+            "seeds": list(self.seeds),
+            "schedulers": list(SERVE_SCHEDULERS),
+            "simulated": self.simulated,
+            "cached": self.cached,
+            "cells": [c.to_dict() for c in self.cells],
+        }
+
+    def save_json(self, path: Union[str, Path]) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_dict(), indent=2, sort_keys=True)
+                        + "\n")
+        return path
+
+    def format(self) -> str:
+        lines = [f"== serving atlas: harvest vs adaptive on co-located "
+                 f"service fleets ({self.preset} batch mix, "
+                 f"{len(self.seeds)} paired seeds/cell; "
+                 f"{self.simulated} simulated, {self.cached} cached) =="]
+        for c in self.cells:
+            t, p = c.throughput, c.p99
+            lines.append(
+                f"  {c.profile:16s} {c.shape:6s} ({c.num_jobs:3d} jobs)  "
+                f"batch {t.mean_gain_pct:+6.1f}% "
+                f"[{t.ci_lo_pct:+6.1f}%, {t.ci_hi_pct:+6.1f}%] "
+                f"-> {c.verdict():4s}  "
+                f"p99 {p.mean_gain_pct:+6.1f}%  "
+                f"viol {c.violation_rate.get('adaptive', 0.0):.4f}/"
+                f"{c.violation_rate.get('harvest', 0.0):.4f} "
+                f"(bound {c.slo_bound:.2f}) "
+                f"{'ok' if c.slo_ok() else 'BREACH'}  "
+                f"borrows {c.harvest_borrows:.1f}")
+        return "\n".join(lines)
+
+    def to_markdown(self) -> str:
+        head = [
+            "| profile | cluster | jobs | harvest vs adaptive batch "
+            "(95% CI) | verdict | serve p99 Δ | violation rate "
+            "(adaptive / harvest, bound) | SLO | borrows / returns |",
+            "| --- | --- | ---: | --- | --- | --- | --- | --- | --- |",
+        ]
+        rows = []
+        for c in self.cells:
+            t, p = c.throughput, c.p99
+            rows.append(
+                f"| {c.profile} | {c.shape} | {c.num_jobs} "
+                f"| {t.mean_gain_pct:+.1f}% [{t.ci_lo_pct:+.1f}%, "
+                f"{t.ci_hi_pct:+.1f}%] | {c.verdict()} "
+                f"| {p.mean_gain_pct:+.1f}% "
+                f"| {c.violation_rate.get('adaptive', 0.0):.4f} / "
+                f"{c.violation_rate.get('harvest', 0.0):.4f} "
+                f"(≤ {c.slo_bound:.2f}) "
+                f"| {'ok' if c.slo_ok() else '**breach**'} "
+                f"| {c.harvest_borrows:.1f} / {c.harvest_returns:.1f} |")
+        return "\n".join(head + rows)
+
+
+def run_serve_regimes(profiles: Sequence[str] = SERVE_PROFILES,
+                      shapes: Sequence[str] = SERVE_SHAPES,
+                      seeds: Sequence[int] = FULL_SEEDS,
+                      cache_dir: Union[str, Path] = ".exp-cache",
+                      *, preset: str = SERVE_PRESET,
+                      workers: int = 0, n_boot: int = 2000,
+                      progress=None) -> ServeReport:
+    """Run (or re-serve from cache) the serving axis: every profile x
+    shape cell pairs ``harvest`` against ``adaptive`` on identical
+    (trace, placement, jitter, request-stream) draws, so the throughput
+    and p99 comparisons isolate the harvest component."""
+    for p in profiles:
+        if p not in _SERVE_BASES:
+            raise ValueError(f"unknown serve profile {p!r}; available: "
+                             f"{', '.join(_SERVE_BASES)}")
+    cells: List[ServeCell] = []
+    simulated = cached = 0
+    for profile in profiles:
+        for shape in shapes:
+            spec = serve_spec(profile, shape, seeds, preset=preset)
+            report = run_experiment(spec, cache_dir, workers=workers,
+                                    progress=progress)
+            simulated += report.simulated
+            cached += report.cached
+            by = report.by_scheduler()
+            machines, vms = FLEET_SHAPES[shape]
+            cells.append(ServeCell(
+                profile=profile,
+                shape=shape,
+                machines=machines,
+                vms=vms,
+                num_jobs=scaled_jobs(preset, machines),
+                seeds=tuple(seeds),
+                slo_bound=serve_profile(profile,
+                                        machines).slo_violation_bound,
+                throughput=compare_throughput(by["adaptive"], by["harvest"],
+                                              n_boot=n_boot),
+                p99=compare_serve_p99(by["adaptive"], by["harvest"],
+                                      n_boot=n_boot),
+                violation_rate={
+                    s: _mean([r.serve.get("violation_rate", 0.0)
+                              for r in rs])
+                    for s, rs in by.items()},
+                mean_p99_ms={
+                    s: _mean([r.serve.get("p99_ms", 0.0) for r in rs])
+                    for s, rs in by.items()},
+                mean_makespan={s: _mean([r.makespan for r in rs])
+                               for s, rs in by.items()},
+                harvest_borrows=_mean(
+                    [r.serve.get("harvest_borrows", 0)
+                     for r in by["harvest"]]),
+                harvest_returns=_mean(
+                    [r.serve.get("harvest_returns", 0)
+                     for r in by["harvest"]]),
+            ))
+            if progress:
+                c = cells[-1]
+                progress(f"[serve {profile}/{shape}] batch "
+                         f"{c.throughput.mean_gain_pct:+.1f}% "
+                         f"-> {c.verdict()}, p99 "
+                         f"{c.p99.mean_gain_pct:+.1f}%, "
+                         f"viol {c.violation_rate.get('harvest', 0.0):.4f} "
+                         f"({'ok' if c.slo_ok() else 'BREACH'})")
+    return ServeReport(preset=preset, profiles=tuple(profiles),
+                       shapes=tuple(shapes), seeds=tuple(seeds),
+                       cells=cells, simulated=simulated, cached=cached)

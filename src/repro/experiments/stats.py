@@ -19,6 +19,38 @@ from repro.experiments.metrics import RunRecord
 DEFAULT_N_BOOT = 2000
 
 
+def percentile(values: Sequence[float], q: float) -> float:
+    """Exact nearest-rank percentile of ``values`` (q in [0, 100]).
+
+    The nearest-rank method (``sorted[ceil(q/100 * n) - 1]``) returns an
+    actual sample — no interpolation — so p50/p99 over request-latency
+    samples are exact order statistics and byte-stable across runs.
+    Raises on an empty sample."""
+    if not values:
+        raise ValueError("percentile over empty sample")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q must be in [0, 100], got {q}")
+    ordered = sorted(values)
+    if q == 0.0:
+        return ordered[0]
+    rank = math.ceil(q / 100.0 * len(ordered))
+    return ordered[rank - 1]
+
+
+def latency_summary(samples: Sequence[float]) -> Dict[str, float]:
+    """Exact p50/p99/mean over request sojourn samples (the serving
+    fold's summary unit).  An empty sample folds to zeros — a service
+    that received no requests has no latency, not an error."""
+    if not samples:
+        return {"n": 0, "mean": 0.0, "p50": 0.0, "p99": 0.0}
+    return {
+        "n": len(samples),
+        "mean": sum(samples) / len(samples),
+        "p50": percentile(samples, 50.0),
+        "p99": percentile(samples, 99.0),
+    }
+
+
 def bootstrap_mean_ci(values: Sequence[float], *, n_boot: int = DEFAULT_N_BOOT,
                       alpha: float = 0.05, seed: int = 0
                       ) -> Tuple[float, float, float]:
@@ -161,3 +193,24 @@ def compare_deadlines(records_a: Sequence[RunRecord],
         "mean_b": sum(pb.deadlines_met for _, pb in pairs) / len(pairs),
         "n_pairs": len(pairs),
     }
+
+
+def compare_serve_p99(records_a: Sequence[RunRecord],
+                      records_b: Sequence[RunRecord], *,
+                      n_boot: int = DEFAULT_N_BOOT,
+                      seed: int = 0) -> PairedComparison:
+    """Whole-run serving p99-latency delta of B vs A (lower is better),
+    paired per (trace, cluster, seed).  Both sides must carry serving
+    metrics (``RunRecord.serve``) — e.g. a harvest policy vs its
+    no-harvest baseline on an identical service fleet."""
+    pairs = _pair_records(records_a, records_b)
+    missing = [r.scheduler for r, _ in pairs if not r.serve] + \
+              [r.scheduler for _, r in pairs if not r.serve]
+    if missing:
+        raise ValueError(
+            f"runs without serving metrics cannot compare p99: {missing}")
+    return paired_bootstrap(
+        [pa.serve["p99_ms"] for pa, _ in pairs],
+        [pb.serve["p99_ms"] for _, pb in pairs],
+        metric="serve_p99_ms", higher_is_better=False,
+        n_boot=n_boot, seed=seed)

@@ -80,6 +80,16 @@ class TraceSummary:
     machine_launches: Dict[int, int] = field(default_factory=dict)
     machine_crashes: Dict[int, int] = field(default_factory=dict)
     job_maps: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    # -- serving / harvest --------------------------------------------------
+    serve_ticks: int = 0
+    harvest_borrows: Dict[str, int] = field(default_factory=dict)   # by signal
+    harvest_returns: Dict[str, int] = field(default_factory=dict)   # by signal
+    # per-service latency timeline [t, p99_ms] (one point per replica tick)
+    service_timeline: Dict[str, List[List[float]]] = field(
+        default_factory=dict)
+    # per-service SLO residency: fraction of replica ticks whose p99 held
+    # under the service's SLO ({"ticks", "ok_ticks", "residency"})
+    service_slo: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     # -- derived ------------------------------------------------------------
     def locality_rate(self) -> float:
@@ -96,6 +106,12 @@ class TraceSummary:
 
     def total_park_wins(self) -> int:
         return sum(self.park_wins.values())
+
+    def total_harvest_borrows(self) -> int:
+        return sum(self.harvest_borrows.values())
+
+    def total_harvest_returns(self) -> int:
+        return sum(self.harvest_returns.values())
 
     def to_dict(self) -> Dict[str, object]:
         d = dict(self.__dict__)
@@ -189,6 +205,25 @@ def fold_trace(bus: TraceBus, makespan: float) -> TraceSummary:
         elif kind == "crash":
             m = data["machine"]
             s.machine_crashes[m] = s.machine_crashes.get(m, 0) + 1
+        elif kind == "serve_tick":
+            s.serve_ticks += 1
+            svc = data["service"]
+            s.service_timeline.setdefault(svc, []).append(
+                [t, data["p99_ms"]])
+            slo = s.service_slo.setdefault(
+                svc, {"ticks": 0, "ok_ticks": 0})
+            slo["ticks"] += 1
+            if data["p99_ms"] <= data["slo_p99_ms"]:
+                slo["ok_ticks"] += 1
+        elif kind == "harvest_borrow":
+            sig = data.get("signal", "unknown")
+            s.harvest_borrows[sig] = s.harvest_borrows.get(sig, 0) + 1
+        elif kind == "harvest_return":
+            sig = data.get("signal", "unknown")
+            s.harvest_returns[sig] = s.harvest_returns.get(sig, 0) + 1
+    for slo in s.service_slo.values():
+        slo["residency"] = (slo["ok_ticks"] / slo["ticks"]
+                            if slo["ticks"] else 1.0)
     return s
 
 
@@ -233,8 +268,15 @@ def chrome_trace_events(bus: TraceBus) -> List[Dict[str, object]]:
                 "args": {k: v for k, v in data.items()
                          if k not in ("task", "tkind", "node")},
             })
+        elif kind == "serve_tick":
+            out.append({
+                "name": f"serve:{data['service']}", "ph": "C",
+                "pid": data.get("machine", 0), "ts": t * us,
+                "args": {"p99_ms": data["p99_ms"], "util": data["util"],
+                         "cores": data["cores"]}})
         elif kind in ("park_admit", "park_deny", "unpark", "park_expired",
                       "park_crashed", "park_outcome", "reconfig_match",
+                      "harvest_borrow", "harvest_return",
                       "crash", "restart", "burst", "rereplicate"):
             out.append({
                 "name": (f"{kind}:{data['gate']}" if kind == "park_deny"
@@ -368,6 +410,21 @@ def format_summary(label: str, record: RunRecord,
     if summary.machine_crashes:
         lines.append(f"  faults: {sum(summary.machine_crashes.values())} "
                      f"crashes over {len(summary.machine_crashes)} machines")
+    if summary.serve_ticks:
+        res = ", ".join(
+            f"{svc} {d['residency'] * 100:.1f}%"
+            for svc, d in sorted(summary.service_slo.items()))
+        line = (f"  serve: {summary.serve_ticks} replica ticks; "
+                f"SLO residency {res}; harvest "
+                f"{summary.total_harvest_borrows()} borrows / "
+                f"{summary.total_harvest_returns()} returns")
+        if summary.harvest_borrows or summary.harvest_returns:
+            sigs = sorted(
+                list(summary.harvest_borrows.items())
+                + list(summary.harvest_returns.items()),
+                key=lambda kv: (-kv[1], kv[0]))
+            line += " (" + ", ".join(f"{k} {n}" for k, n in sigs) + ")"
+        lines.append(line)
     return "\n".join(lines)
 
 

@@ -19,7 +19,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.types import ClusterSpec, FaultConfig, JobSpec, MachineClass
+from repro.core.types import (ClusterSpec, FaultConfig, JobSpec, MachineClass,
+                              ServeConfig, ServiceSpec)
 from repro.simcluster.workloads import (WORKLOADS, default_deadline, make_job,
                                         n_map_tasks)
 
@@ -45,12 +46,16 @@ class Scenario:
     # fault-injection layer (FaultConfig, default disabled) — churn
     # scenarios run the same arrival trace on a fleet that loses nodes
     faults: FaultConfig = FaultConfig()
+    # co-located serving layer (ServeConfig, default disabled) — serving
+    # scenarios pin service cores the batch side can harvest back
+    serve: ServeConfig = ServeConfig()
 
     def cluster(self) -> ClusterSpec:
         return ClusterSpec(num_machines=self.num_machines,
                            vms_per_machine=self.vms_per_machine,
                            replication=self.replication,
-                           faults=self.faults)
+                           faults=self.faults,
+                           serve=self.serve)
 
     def jobs(self, spec: ClusterSpec, seed: int = 0) -> List[JobSpec]:
         rng = random.Random(seed)
@@ -131,6 +136,17 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
                              mtbf_scale=0.5),
             ))),
     Scenario(
+        name="fleet_100x2_serving",
+        description=("100 machines x 2 VMs, 120 batch jobs co-located with "
+                     "a 20-replica 2-vCPU service fleet (40 of 400 cores "
+                     "pinned) — the serving/harvest benchmark scenario"),
+        num_machines=100, vms_per_machine=2, num_jobs=120,
+        burst_size=30, burst_gap=240.0,
+        serve=ServeConfig(enabled=True, services=(
+            ServiceSpec(name="api", replicas=20, vcpus=2, base_rps=15.0,
+                        diurnal_amplitude=0.3, slo_p99_ms=600.0),
+        ))),
+    Scenario(
         name="smoke_40x2",
         description="40 machines x 2 VMs, 40 jobs — CI-sized smoke scenario",
         num_machines=40, vms_per_machine=2, num_jobs=40,
@@ -201,6 +217,9 @@ def run_scenario(name: str, *, scheduler="proposed", seed: int = 0,
     jobs = sc.jobs(spec, seed=seed)
     sched = build_policy(scheduler, spec, legacy=(engine == "legacy"))
     if engine == "legacy":
+        if spec.serve.active:
+            raise ValueError("the legacy engine has no serving layer; "
+                             "serving scenarios require engine='indexed'")
         from repro.simcluster._legacy import LegacyClusterSim
         sim = LegacyClusterSim(spec, sched, seed=seed)
     else:

@@ -88,6 +88,11 @@ class SimResult:
     fault_log: List[FaultEvent] = field(default_factory=list)
     # decision-trace bus (ClusterSpec.tracing; None when tracing is off)
     trace: Optional[TraceBus] = None
+    # serving layer (empty when ServeConfig is off): whole-run latency/
+    # SLO/harvest stats plus the per-tick request log — the log is the
+    # determinism pin's artifact (same config+seed => byte-identical)
+    serve_stats: Dict[str, object] = field(default_factory=dict)
+    serve_log: List[list] = field(default_factory=list)
 
     # -- derived metrics ----------------------------------------------------
     def completion_time(self, job_id: str) -> float:
@@ -219,12 +224,29 @@ class ClusterSim:
             # next submit revives them (same liveness rule as heartbeats)
             self._idle_crash_chains: Set[int] = set()
             self._idle_burst_chains: Set[int] = set()
+        # -- serving layer (ServeConfig; None = disabled, zero overhead) -----
+        # lazy import: serving pulls latency percentiles from
+        # repro.experiments.stats, whose package imports this module
+        self.serving = None
+        self._serve_idle = False
+        if spec.serve.active:
+            from repro.simcluster.serving import ServingLayer
+            self.serving = ServingLayer(spec, seed, sched=scheduler,
+                                        reconfig=self.reconfig,
+                                        trace=self.trace)
 
     # -- capacities ----------------------------------------------------------
     def map_capacity(self, node: int) -> int:
-        if self.reconfig is not None:
-            return self.reconfig.vcpus[node]
-        return self.spec.base_map_slots
+        cap = (self.reconfig.vcpus[node] if self.reconfig is not None
+               else self.spec.base_map_slots)
+        if self.serving is not None:
+            # pinned service cores are carved out of the VM's map slots; a
+            # harvest borrow shrinks the reservation (never the reconfig's
+            # vcpu ledger), a preemptive return grows it back — free_map
+            # may then go transiently negative: running maps drain, no new
+            # ones launch
+            cap -= self.serving.reserved[node]
+        return cap
 
     def free_map(self, node: int) -> int:
         return self.map_capacity(node) - len(self.map_running[node])
@@ -302,6 +324,13 @@ class ClusterSim:
                 for m in range(self.spec.num_machines):
                     self._push(self._burst_rng[m].expovariate(
                         1.0 / faults.burst_rate), "burst", m)
+        if self.serving is not None:
+            # one global serve chain at the heartbeat interval; like the
+            # heartbeat/fault chains it dies when the cluster drains and
+            # the next submit revives it (arrivals are generated from the
+            # replicas' own streams at the next tick, so a revived tick
+            # covers the whole idle gap with correctly-timed requests)
+            self._push(self.spec.heartbeat_interval, "serve", None)
         now = 0.0
         while self.events:
             now, _, kind, data = heapq.heappop(self.events)
@@ -339,6 +368,10 @@ class ClusterSim:
                             self._hb_dead.discard(node)
                 if faults is not None:
                     self._revive_fault_chains(now)
+                if self._serve_idle:
+                    self._serve_idle = False
+                    self._push(now + self.spec.heartbeat_interval,
+                               "serve", None)
             elif kind == "finish":
                 self._on_finish(data, now)
             elif kind == "plug":
@@ -364,6 +397,8 @@ class ClusterSim:
                     # idle: let this chain die instead of ticking forever;
                     # the next submit revives it
                     self._hb_dead.add(node)
+            elif kind == "serve":
+                self._on_serve_tick(now)
             elif kind == "crash":
                 self._on_crash(data, now)
             elif kind == "restart":
@@ -383,6 +418,10 @@ class ClusterSim:
             fault_stats=dict(self.fault_stats) if faults is not None else {},
             fault_log=list(self.fault_log),
             trace=self.trace,
+            serve_stats=(self.serving.stats()
+                         if self.serving is not None else {}),
+            serve_log=(list(self.serving.log)
+                       if self.serving is not None else []),
         )
         return result
 
@@ -547,7 +586,7 @@ class ClusterSim:
                 if isinstance(self.sched, CompletionTimeScheduler):
                     self.sched.parked_task_expired(parked.task, now)
             self._match_reconfig(now)
-        fm, fr = self.free_map(node), self.free_reduce(node)
+        fm, fr = max(0, self.free_map(node)), self.free_reduce(node)
         if fm > 0 or fr > 0:
             for launch in self.sched.select(node, fm, fr, now):
                 self._launch(launch, now)
@@ -582,6 +621,19 @@ class ClusterSim:
             data["free_ewma"] = list(rc.free_ewma)
             data["park_outcome_ewma"] = rc.park_outcome_ewma
         self.trace.emit(now, "pressure", data)
+
+    # -- serving layer (ServeConfig; handler unreachable when off) ------------
+    def _on_serve_tick(self, now: float) -> None:
+        """One global serve tick: advance every replica's arrival stream,
+        drain its queue, fold latency/SLO counters, run harvest.  The
+        chain follows the heartbeat liveness rule so a drained run
+        terminates; a revived tick covers the idle gap exactly (arrivals
+        carry their true times)."""
+        if not (self.sched.has_active_jobs() or self._pending_submits > 0):
+            self._serve_idle = True
+            return
+        self.serving.tick(now)
+        self._push(now + self.spec.heartbeat_interval, "serve", None)
 
     # -- fault injection (FaultConfig; handlers unreachable when off) ---------
     def _fault_live(self) -> bool:
@@ -638,6 +690,10 @@ class ClusterSim:
             for task in self.reconfig.machine_down(machine, now):
                 self.sched.parked_task_crashed(task, now)
         self.sched.node_down(nodes, now)
+        if self.serving is not None:
+            # chaos interaction: the machine's service replicas go down —
+            # in-window arrivals shed, borrowed cores return immediately
+            self.serving.machine_down(machine, now)
         self._push(now + self._crash_rng[machine].expovariate(
             1.0 / f.crash_mttr), "restart", machine)
         self._push(now + f.rereplicate_after, "rereplicate",
@@ -692,6 +748,8 @@ class ClusterSim:
         self.down_nodes.difference_update(nodes)
         if self.reconfig is not None:
             self.reconfig.machine_restarted(machine, now)
+        if self.serving is not None:
+            self.serving.machine_restarted(machine, now)
         self.sched.node_up(nodes, now)
         for v in nodes:
             # fresh heartbeat chain (the crash staled the old one); if the

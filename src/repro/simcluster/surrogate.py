@@ -47,6 +47,7 @@ function of the cell alone, never of its batch mates.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -646,8 +647,25 @@ def _make_kernel(n_jobs: int, n_steps: int, diag: bool = False):
 _KERNEL_CACHE: Dict[Tuple[int, int, bool, bool], object] = {}
 
 #: cells per vmapped sub-batch in run_batch — large enough to amortize
-#: dispatch, small enough that the scan carry stays cache-resident
+#: dispatch, small enough that the scan carry stays cache-resident.
+#: Overridable per-call (``run_batch(..., max_batch=...)``) or process-wide
+#: via ``REPRO_SURROGATE_MAX_BATCH``; per-cell results are independent of
+#: the sub-batch split, so overrides only move the dispatch/cache tradeoff.
 _MAX_BATCH = 64
+
+
+def _resolve_max_batch(max_batch: Optional[int] = None) -> int:
+    """Sub-batch cap for ``run_batch``: explicit kwarg beats the
+    ``REPRO_SURROGATE_MAX_BATCH`` env var beats the built-in default."""
+    if max_batch is None:
+        env = os.environ.get("REPRO_SURROGATE_MAX_BATCH")
+        if env:
+            max_batch = int(env)
+        else:
+            return _MAX_BATCH
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    return max_batch
 
 
 def _compiled(n_jobs: int, n_steps: int, batched: bool, diag: bool = False):
@@ -752,12 +770,15 @@ def run_cell(cell: SurrogateCellInputs,
     return result
 
 
-def run_batch(cells: Sequence[SurrogateCellInputs]) -> List[SurrogateResult]:
+def run_batch(cells: Sequence[SurrogateCellInputs], *,
+              max_batch: Optional[int] = None) -> List[SurrogateResult]:
     """Integrate many cells, grouped by (jobs, steps) bucket and run
-    through ``vmap`` in sub-batches of ``_MAX_BATCH`` — a handful of XLA
+    through ``vmap`` in sub-batches of ``max_batch`` (default ``_MAX_BATCH``,
+    overridable via ``REPRO_SURROGATE_MAX_BATCH``) — a handful of XLA
     computations for thousands of cells per call.  Results come back in
-    input order and are bit-identical to ``run_cell`` on each cell alone
-    (pinned by the fuzz suite)."""
+    input order and are bit-identical to ``run_cell`` on each cell alone,
+    whatever the sub-batch cap (pinned by the fuzz suite)."""
+    cap = _resolve_max_batch(max_batch)
     groups: Dict[Tuple[int, int], List[int]] = {}
     for i, cell in enumerate(cells):
         groups.setdefault((cell.padded_jobs(), cell.n_steps()), []).append(i)
@@ -766,8 +787,8 @@ def run_batch(cells: Sequence[SurrogateCellInputs]) -> List[SurrogateResult]:
         # sub-batch each bucket: per-cell results are independent of batch
         # composition (pinned by the fuzz suite), and moderate batches keep
         # the scan carry cache-resident — a single huge vmap thrashes
-        for lo in range(0, len(idxs), _MAX_BATCH):
-            part = idxs[lo:lo + _MAX_BATCH]
+        for lo in range(0, len(idxs), cap):
+            part = idxs[lo:lo + cap]
             packed = [pack_cell(cells[i]) for i in part]
             stacked = {k: np.stack([q[k] for q in packed])
                        for k in packed[0]}

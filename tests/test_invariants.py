@@ -644,6 +644,27 @@ def assert_trace_reconciles(sim, res):
         if bus.count(kind) != logged:
             raise InvariantViolation(
                 f"{kind} events={bus.count(kind)} != {logged} in fault_log")
+    # harvest ledger: borrow/return events mirror the reconfigurator
+    # counters and the serving layer's own accounting
+    if stats:
+        for ev, key in (("harvest_borrow", "harvest_borrows"),
+                        ("harvest_return", "harvest_returns")):
+            if bus.count(ev) != stats.get(key, 0):
+                raise InvariantViolation(
+                    f"{ev} events={bus.count(ev)} != "
+                    f"reconfig_stats[{key}]={stats.get(key, 0)}")
+    if getattr(sim, "serving", None) is not None:
+        st = res.serve_stats
+        if (st["harvest_borrows"] - st["harvest_returns"]
+                != st["outstanding_borrows"]):
+            raise InvariantViolation(
+                f"harvest ledger leak: {st['harvest_borrows']} borrows - "
+                f"{st['harvest_returns']} returns != "
+                f"{st['outstanding_borrows']} outstanding")
+        if stats and st["harvest_borrows"] != stats["harvest_borrows"]:
+            raise InvariantViolation(
+                f"serving layer counted {st['harvest_borrows']} borrows, "
+                f"reconfigurator {stats['harvest_borrows']}")
 
 
 @pytest.mark.parametrize("scheduler", ["proposed", "adaptive", "fair"])
@@ -686,6 +707,32 @@ def test_trace_events_reconcile_across_latch_relief_paths():
     assert crashes > 0          # the fault half of the audit ran
     assert abl_trips > 0        # measured: 3 trips across these seeds
     assert on_trips == 0        # churn relief stands the latch down
+
+
+def test_trace_events_reconcile_with_serving_harvest():
+    """The harvest half of the audit: borrow/return events on the bus
+    mirror the reconfigurator counters and the serving layer's own ledger
+    — on a quiet fleet and under churn — and borrowing actually happened
+    (the audit demonstrably crossed the harvest paths)."""
+    from repro.core.types import ServeConfig, ServiceSpec
+    from repro.simcluster.workloads import paper_cluster, paper_table2_jobs
+    borrows = 0
+    for seed, faults in ((3, False), (11, True)):
+        spec = dataclasses.replace(
+            paper_cluster(),
+            serve=ServeConfig(enabled=True, services=(
+                ServiceSpec(name="api", replicas=6, vcpus=2, base_rps=15.0,
+                            diurnal_amplitude=0.3, slo_p99_ms=400.0),)),
+            tracing=TraceConfig(enabled=True))
+        if faults:
+            spec = dataclasses.replace(spec, faults=fuzz_fault_config(
+                random.Random(808800), enabled=True))
+        sched = PolicySpec("harvest").build(spec)
+        sim = ClusterSim(spec, sched, seed=seed)
+        res = sim.run(paper_table2_jobs(spec, seed=seed))
+        assert_trace_reconciles(sim, res)
+        borrows += res.trace.count("harvest_borrow")
+    assert borrows > 0
 
 
 def test_injected_map_open_jobs_bug_on_mass_loss_is_caught(monkeypatch):

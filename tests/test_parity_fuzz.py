@@ -55,7 +55,8 @@ import pytest
 
 from repro.core.policies import PolicyError, PolicySpec
 from repro.core.types import (AdaptiveConfig, ClusterSpec, FaultConfig,
-                              MachineClass, TraceConfig)
+                              MachineClass, ServeConfig, ServiceSpec,
+                              TraceConfig)
 from repro.simcluster._legacy import LegacyClusterSim
 from repro.simcluster.sim import ClusterSim
 from repro.simcluster.workloads import WORKLOADS, default_deadline, make_job
@@ -147,6 +148,34 @@ def fuzz_trace_config(rng: random.Random,
     )
 
 
+def fuzz_serve_config(rng: random.Random) -> ServeConfig:
+    """Random-but-**inactive** ServeConfig: either disabled carrying wild
+    service specs, or quiet-enabled with zero services.  Both leave
+    ``active`` False, so the serving layer must never be constructed — not
+    a single extra RNG draw, not one decision perturbed."""
+    enabled = rng.random() < 0.5
+    services = ()
+    if not enabled and rng.random() < 0.7:
+        services = tuple(
+            ServiceSpec(name=f"svc{i}",
+                        replicas=rng.randint(1, 4),
+                        vcpus=rng.randint(1, 2),
+                        base_rps=round(rng.uniform(1.0, 40.0), 2),
+                        diurnal_amplitude=round(rng.uniform(0.0, 0.9), 2),
+                        burst_prob=round(rng.uniform(0.0, 0.2), 3),
+                        burst_size_mean=round(rng.uniform(1.0, 16.0), 1),
+                        service_time=round(rng.uniform(0.005, 0.1), 4),
+                        slo_p99_ms=round(rng.uniform(100.0, 800.0), 1))
+            for i in range(rng.randint(1, 2)))
+    headroom = round(rng.uniform(0.1, 0.8), 2)
+    return ServeConfig(
+        enabled=enabled, services=services,
+        harvest_headroom=headroom,
+        harvest_return_util=round(headroom + rng.uniform(0.05, 0.19), 3),
+        harvest_util_alpha=round(rng.uniform(0.05, 0.9), 3),
+        slo_violation_bound=round(rng.uniform(0.0, 0.2), 3))
+
+
 def build_scenario(rng: random.Random):
     """One random scenario: cluster shape, job mix, sim + scheduler knobs.
     Everything is drawn from ``rng``, so a scenario is reproducible from its
@@ -182,6 +211,10 @@ def build_scenario(rng: random.Random):
         crash_discount=rng.random() < 0.5,
         ewma_gap_cap=round(rng.uniform(0.0, 8.0), 2),
     ))
+    # serving knobs are tail-drawn for the same reason: while the config is
+    # inactive (disabled, or quiet-enabled with zero services) it must be
+    # invisible to both engines — the parity sweep proves it
+    spec = dataclasses.replace(spec, serve=fuzz_serve_config(rng))
     return {
         "spec": spec,
         "jobs": jobs,
@@ -457,6 +490,57 @@ def test_fault_off_is_default_and_inert():
     assert {j: r.finish_time for j, r in res_knobs.jobs.items()} \
         == {j: r.finish_time for j, r in res_plain.jobs.items()}
     assert res_knobs.fault_stats == {} and res_knobs.fault_log == []
+
+
+@pytest.mark.fuzz
+def test_serving_off_is_default_and_inert():
+    """ServeConfig defaults to off, an inactive config with wild knobs
+    produces the identical run as the default config, and no serving layer
+    or serve metrics appear — the serving analogue of the fault pin."""
+    assert ServeConfig().enabled is False
+    assert ServeConfig().active is False
+    # quiet-enabled (services=()) is inactive too — satellite contract
+    assert ServeConfig(enabled=True).active is False
+    sc = build_scenario(random.Random(77377))
+    sc["scheduler"] = "proposed"
+    assert sc["spec"].serve != ServeConfig()     # wild (inactive) knobs
+    assert not sc["spec"].serve.active
+    res_knobs = _run_proposed(sc)
+    sc_plain = dict(sc)
+    sc_plain["spec"] = dataclasses.replace(sc["spec"], serve=ServeConfig())
+    sc_plain["jobs"] = [j for j in sc["jobs"]]
+    res_plain = _run_proposed(sc_plain)
+    assert res_knobs.makespan == res_plain.makespan
+    assert {j: r.finish_time for j, r in res_knobs.jobs.items()} \
+        == {j: r.finish_time for j, r in res_plain.jobs.items()}
+    assert res_knobs.serve_stats == {} and res_knobs.serve_log == []
+
+
+@pytest.mark.fuzz
+def test_serving_quiet_enabled_matches_off_bit_exact():
+    """``ServeConfig(enabled=True, services=())`` is *quiet-enabled*: the
+    layer never builds, so the run is bit-exact against serving-off —
+    makespan, per-job launch splits and reconfig stats all identical."""
+    sc = build_scenario(random.Random(424242))
+    sc["scheduler"] = "proposed"
+    sc_off = dict(sc)
+    sc_off["spec"] = dataclasses.replace(sc["spec"], serve=ServeConfig())
+    sc_off["jobs"] = [j for j in sc["jobs"]]
+    sc_quiet = dict(sc)
+    sc_quiet["spec"] = dataclasses.replace(
+        sc["spec"], serve=ServeConfig(enabled=True, services=()))
+    sc_quiet["jobs"] = [j for j in sc["jobs"]]
+    res_off, res_quiet = _run_proposed(sc_off), _run_proposed(sc_quiet)
+    assert res_off.makespan == res_quiet.makespan
+    assert res_off.events_processed == res_quiet.events_processed
+    assert res_off.reconfig_stats == res_quiet.reconfig_stats
+    for jid, off in res_off.jobs.items():
+        quiet = res_quiet.jobs[jid]
+        assert off.finish_time == quiet.finish_time, jid
+        assert off.local_map_launches == quiet.local_map_launches, jid
+        assert off.remote_map_launches == quiet.remote_map_launches, jid
+        assert off.map_durations == quiet.map_durations, jid
+    assert res_quiet.serve_stats == {} and res_quiet.serve_log == []
 
 
 @pytest.mark.fuzz

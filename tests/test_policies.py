@@ -35,23 +35,44 @@ PRESETS = ("proposed", "adaptive", "fair", "fifo")
 def test_registry_covers_presets_and_extras():
     reg = registered_policies()
     assert set(PRESETS) <= set(reg)
-    assert {"adaptive_ra", "delay", "edf_nopark"} <= set(reg)
+    assert {"adaptive_ra", "delay", "edf_nopark", "harvest"} <= set(reg)
     for name, pol in reg.items():
         assert pol.name == name
         for axis, vocab in COMPONENT_AXES.items():
             assert pol.components[axis] in vocab, (name, axis)
-    # the component decomposition puts the presets where the paper does
+    # the component decomposition puts the presets where the paper does;
+    # every pre-serving policy sits at harvest "off" (the axis default)
     assert reg["proposed"].components == {
-        "ordering": "edf", "park": "fixed", "overload": "none"}
+        "ordering": "edf", "park": "fixed", "overload": "none",
+        "harvest": "off"}
     assert reg["adaptive"].components == {
-        "ordering": "edf", "park": "adaptive", "overload": "latch"}
+        "ordering": "edf", "park": "adaptive", "overload": "latch",
+        "harvest": "off"}
     assert reg["adaptive_ra"].components["overload"] == "reduce_aware"
     assert reg["fair"].components["ordering"] == "fair_deficit"
     assert reg["fifo"].components["ordering"] == "fifo"
     assert reg["delay"].components == {
-        "ordering": "fair_deficit", "park": "off", "overload": "none"}
+        "ordering": "fair_deficit", "park": "off", "overload": "none",
+        "harvest": "off"}
     assert reg["edf_nopark"].components == {
-        "ordering": "edf", "park": "off", "overload": "none"}
+        "ordering": "edf", "park": "off", "overload": "none",
+        "harvest": "off"}
+    # the serving-aware preset: adaptive machinery + the harvest component
+    assert reg["harvest"].components == {
+        "ordering": "edf", "park": "adaptive", "overload": "latch",
+        "harvest": "ewma"}
+
+
+def test_harvest_preset_builds_harvest_flagged_scheduler():
+    """Only the ``harvest`` preset flips ``SchedulerBase.harvest``; every
+    other registered policy leaves the class default False."""
+    spec = ClusterSpec(num_machines=2)
+    assert SchedulerBase.harvest is False
+    sched = build_policy("harvest", spec)
+    assert sched.harvest is True
+    assert sched.spec.adaptive.enabled         # adaptive construction path
+    for name in ("proposed", "adaptive", "fair", "fifo", "delay"):
+        assert build_policy(name, spec).harvest is False, name
 
 
 @pytest.mark.parametrize("name", sorted({"proposed", "adaptive",

@@ -1,0 +1,368 @@
+"""The serving layer contract (``repro.simcluster.serving``).
+
+Covers: the SLO fleet drains alongside the batch workload and folds
+per-tick/whole-run latency metrics; request streams and harvest decisions
+are byte-reproducible per (config, seed, policy); the harvest ledger
+reconciles three ways (serving layer == reconfigurator counters == trace
+bus); chaos interaction (a crashed machine drops its replicas and sheds
+in-window arrivals; churn relief stands harvesting down); oversubscribed
+service placements are rejected at construction; and the satellite
+latency-percentile utilities in ``experiments.stats``.
+
+Serving-off inertness (wild inactive knobs, quiet-enabled bit-exactness,
+the 200-scenario parity sweep) lives in ``tests/test_parity_fuzz.py``;
+the cache-hash pins live in ``tests/test_policies.py``.
+"""
+import dataclasses
+import json
+import math
+import random
+
+import pytest
+
+from repro.core.policies import build_policy
+from repro.core.types import (AdaptiveConfig, ClusterSpec, FaultConfig,
+                              ServeConfig, ServiceSpec, TraceConfig)
+from repro.simcluster.serving import (BORROW_SIGNALS, RETURN_SIGNALS,
+                                      ServingLayer)
+from repro.simcluster.sim import ClusterSim
+from repro.simcluster.workloads import paper_cluster, paper_table2_jobs
+
+SERVICES = (ServiceSpec(name="api", replicas=6, vcpus=2, base_rps=15.0,
+                        diurnal_amplitude=0.3, slo_p99_ms=400.0),)
+
+
+def serve_cluster(services=SERVICES, **serve_over) -> ClusterSpec:
+    return dataclasses.replace(
+        paper_cluster(),
+        serve=ServeConfig(enabled=True, services=services, **serve_over))
+
+
+def run_serving(spec, policy="harvest", seed=3, tracing=False):
+    """(sim, result) for the paper job mix on a serving cluster."""
+    if tracing:
+        spec = dataclasses.replace(spec, tracing=TraceConfig(enabled=True))
+    sched = build_policy(policy, spec)
+    sim = ClusterSim(spec, sched, seed=seed)
+    return sim, sim.run(paper_table2_jobs(spec, seed=seed))
+
+
+def _stream_fingerprint(res) -> str:
+    """Canonical byte string of everything the serving layer produced."""
+    return json.dumps([res.serve_log, res.serve_stats,
+                       sorted(res.reconfig_stats.items())], sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# the SLO fleet drains and folds metrics
+# ---------------------------------------------------------------------------
+
+def test_serving_fleet_drains_and_folds_metrics():
+    spec = serve_cluster()
+    _, res = run_serving(spec, policy="adaptive")
+    assert all(j.finish_time is not None for j in res.jobs.values())
+    st = res.serve_stats
+    assert st["requests"] > 0
+    assert st["p99_ms"] >= st["p50_ms"] > 0.0
+    assert 0.0 <= st["violation_rate"] <= 1.0
+    svc = st["services"]["api"]
+    assert svc["replicas"] == 6 and svc["vcpus"] == 2
+    assert svc["requests"] == st["requests"]
+    # no harvest component on `adaptive`: cores never move
+    assert st["harvest_borrows"] == st["harvest_returns"] == 0
+    assert res.reconfig_stats["harvest_borrows"] == 0
+    # the per-tick log carries [t, service, replica, served, shed, p50_ms,
+    # p99_ms, util_ewma, cores] rows for every replica
+    assert res.serve_log and all(len(row) == 9 for row in res.serve_log)
+    assert {row[1] for row in res.serve_log} == {"api"}
+    assert all(row[8] == 2 for row in res.serve_log)     # cores never move
+
+
+def test_replica_pinning_reduces_map_capacity():
+    spec = serve_cluster()
+    sched = build_policy("proposed", spec)
+    sim = ClusterSim(spec, sched, seed=0)
+    # 6 replicas x 2 vcpus round-robin from machine 0: each pinned VM loses
+    # its whole map capacity (base_map_slots == 2), the rest keep theirs
+    pinned = {rep.node for rep in sim.serving.replicas}
+    assert len(pinned) == 6
+    for node in range(spec.num_nodes):
+        want = 0 if node in pinned else spec.base_map_slots
+        assert sim.map_capacity(node) == want, node
+
+
+def test_oversubscribed_service_placement_rejected():
+    spec = serve_cluster(services=(
+        ServiceSpec(name="fat", replicas=1, vcpus=3),))
+    sched = build_policy("proposed", spec)
+    with pytest.raises(ValueError, match="oversubscribes"):
+        ClusterSim(spec, sched, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# byte-reproducibility
+# ---------------------------------------------------------------------------
+
+def test_request_streams_and_harvest_byte_reproducible():
+    """Identical (config, seed, workload, policy) => identical request log,
+    serving stats and harvest decisions, byte for byte."""
+    spec = serve_cluster()
+    fingerprints = [_stream_fingerprint(run_serving(spec, seed=7)[1])
+                    for _ in range(2)]
+    assert fingerprints[0] == fingerprints[1]
+
+
+def test_request_schedule_is_policy_independent():
+    """Arrivals come from dedicated per-replica streams — the schedule
+    generated through any instant is a pure function of (config, seed),
+    whatever the scheduler decided around it."""
+    spec = serve_cluster()
+    reps = []
+    for _ in range(2):
+        rep = ServingLayer(spec, seed=5).replicas[0]
+        rep.gen_until(500.0)
+        reps.append(list(rep.buf))
+    assert reps[0] == reps[1]
+    # and the decision RNG is untouched: generating arrivals consumes only
+    # the replica's own stream
+    before = random.Random(5).random()
+    assert before == random.Random(5).random()
+
+
+# ---------------------------------------------------------------------------
+# harvest: borrowing, returning, reconciliation
+# ---------------------------------------------------------------------------
+
+def test_harvest_borrows_and_ledger_reconciles_three_ways():
+    spec = serve_cluster()
+    sim, res = run_serving(spec, policy="harvest", tracing=True)
+    st = res.serve_stats
+    assert st["harvest_borrows"] > 0
+    # ledger identity: borrows - returns == cores still lent out
+    assert (st["harvest_borrows"] - st["harvest_returns"]
+            == st["outstanding_borrows"])
+    assert st["outstanding_borrows"] == sim.serving.outstanding_borrows()
+    # serving layer == reconfigurator accounting == trace bus
+    assert res.reconfig_stats["harvest_borrows"] == st["harvest_borrows"]
+    assert res.reconfig_stats["harvest_returns"] == st["harvest_returns"]
+    assert res.trace.count("harvest_borrow") == st["harvest_borrows"]
+    assert res.trace.count("harvest_return") == st["harvest_returns"]
+    # every emitted event names a documented trigger signal
+    for rec in res.trace.records():
+        if rec["kind"] == "harvest_borrow":
+            assert rec["signal"] in BORROW_SIGNALS, rec
+        elif rec["kind"] == "harvest_return":
+            assert rec["signal"] in RETURN_SIGNALS, rec
+
+
+def test_harvest_recovers_batch_throughput():
+    """On a saturated fleet with an over-provisioned service, lending idle
+    service cores to the batch side must not hurt the makespan — and the
+    borrowed capacity stays inside the per-request SLO."""
+    spec = serve_cluster()
+    _, base = run_serving(spec, policy="adaptive")
+    _, harv = run_serving(spec, policy="harvest")
+    assert harv.serve_stats["harvest_borrows"] > 0
+    assert harv.makespan <= base.makespan
+    bound = spec.serve.slo_violation_bound
+    assert harv.serve_stats["violation_rate"] <= bound
+
+
+def test_harvest_never_takes_last_core():
+    spec = serve_cluster()
+    sim, res = run_serving(spec, policy="harvest")
+    for rep in sim.serving.replicas:
+        assert rep.cores >= 1, (rep.svc.name, rep.index)
+    for row in res.serve_log:
+        assert row[8] >= 1                       # cores column
+
+
+def test_telemetry_folds_harvest_and_service_timeline():
+    from repro.experiments.metrics import run_record_from_result
+    from repro.experiments.telemetry import fold_trace, format_summary
+    from repro.simcluster.traces import Trace
+
+    spec = serve_cluster()
+    _, res = run_serving(spec, policy="harvest", tracing=True)
+    summary = fold_trace(res.trace, res.makespan)
+    assert summary.serve_ticks == res.trace.count("serve_tick")
+    assert summary.total_harvest_borrows() \
+        == res.serve_stats["harvest_borrows"]
+    assert summary.total_harvest_returns() \
+        == res.serve_stats["harvest_returns"]
+    assert "api" in summary.service_timeline
+    slo = summary.service_slo["api"]
+    assert 0.0 <= slo["residency"] <= 1.0
+    assert slo["ticks"] >= slo["ok_ticks"] > 0
+    trace = Trace(name="paper", seed=3, jobs=[])
+    record = run_record_from_result(
+        res, trace=trace, cluster_dict=spec.to_dict(),
+        scheduler="harvest", seed=3, wall_time_s=0.0)
+    text = format_summary("harvest", record, summary)
+    assert "serve:" in text and "SLO residency" in text
+    assert "borrows" in text
+
+
+# ---------------------------------------------------------------------------
+# chaos interaction
+# ---------------------------------------------------------------------------
+
+class _StubReconfig:
+    """Accounting stub: records harvest calls like the real reconfigurator."""
+
+    def __init__(self, machines):
+        from collections import deque
+        self.aq = [deque() for _ in range(machines)]
+        self.calls = []
+
+    def harvest_borrow(self, now, **kw):
+        self.calls.append(("borrow", kw["signal"]))
+
+    def harvest_return(self, now, **kw):
+        self.calls.append(("return", kw["signal"]))
+
+
+class _StubSched:
+    harvest = True
+    total_pending_maps = 40
+
+    def __init__(self, relief=False):
+        self.adaptive = AdaptiveConfig(enabled=True, crash_discount=True)
+        self._machines_down = 1 if relief else 0
+
+
+def _hot_layer(relief=False):
+    """A harvest-enabled layer with one busy-then-idle replica."""
+    spec = ClusterSpec(num_machines=4, vms_per_machine=2, replication=1,
+                       serve=ServeConfig(enabled=True, services=(
+                           ServiceSpec(name="svc", replicas=1, vcpus=2,
+                                       base_rps=2.0, service_time=0.01),)))
+    rc = _StubReconfig(spec.num_machines)
+    layer = ServingLayer(spec, seed=1, sched=_StubSched(relief=relief),
+                         reconfig=rc)
+    assert layer.harvest_on
+    return layer, rc
+
+
+def test_harvest_borrow_names_map_backlog_signal():
+    layer, rc = _hot_layer()
+    for t in range(1, 40):
+        layer.tick(float(3 * t))
+    assert ("borrow", "map_backlog") in rc.calls
+    assert layer.outstanding_borrows() == 1      # never the last core
+
+
+def test_churn_relief_stands_harvesting_down():
+    layer, rc = _hot_layer()
+    for t in range(1, 40):
+        layer.tick(float(3 * t))
+    assert layer.outstanding_borrows() == 1
+    # churn hits: the relief probe flips on the next tick
+    layer.sched._machines_down = 1
+    layer.tick(123.0)
+    assert ("return", "churn_relief") in rc.calls
+    assert layer.outstanding_borrows() == 0
+    # and no new borrow happens while relief holds
+    n_borrows = sum(1 for kind, _ in rc.calls if kind == "borrow")
+    for t in range(50, 70):
+        layer.tick(float(3 * t))
+    assert sum(1 for kind, _ in rc.calls if kind == "borrow") == n_borrows
+
+
+def test_machine_down_sheds_and_returns_cores():
+    layer, rc = _hot_layer()
+    for t in range(1, 40):
+        layer.tick(float(3 * t))
+    rep = layer.replicas[0]
+    assert rep.machine == 0 and rep.borrowed == 1
+    layer.machine_down(0, 120.0)
+    assert ("return", "machine_down") in rc.calls
+    assert rep.down and rep.borrowed == 0
+    served_before = rep.requests
+    shed_before = rep.shed
+    layer.tick(150.0)
+    assert rep.requests == served_before         # down replica serves nothing
+    assert rep.shed > shed_before                # arrivals shed instead
+    # restart: arrivals inside the down window stay shed, new ones serve
+    layer.machine_restarted(0, 150.0)
+    assert not rep.down and rep.up_since == 150.0
+    layer.tick(300.0)
+    assert rep.requests > served_before
+
+
+def test_crash_drops_service_replicas_end_to_end():
+    spec = dataclasses.replace(
+        serve_cluster(),
+        faults=FaultConfig(enabled=True, crash_mtbf=600.0, crash_mttr=90.0,
+                           crash_warmup=30.0))
+    sim, res = run_serving(spec, policy="harvest", seed=11, tracing=True)
+    assert res.fault_stats["crashes"] > 0
+    assert all(j.finish_time is not None for j in res.jobs.values())
+    # the run still reconciles under churn
+    st = res.serve_stats
+    assert (st["harvest_borrows"] - st["harvest_returns"]
+            == st["outstanding_borrows"])
+    assert res.reconfig_stats["harvest_borrows"] == st["harvest_borrows"]
+    # a crash on a pinned machine sheds requests during the outage
+    crashed = {m for _, kind, m in res.fault_log if kind == "crash"}
+    pinned = {rep.machine for rep in sim.serving.replicas}
+    if crashed & pinned:
+        assert st["shed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: experiments.stats latency utilities
+# ---------------------------------------------------------------------------
+
+def test_percentile_is_exact_nearest_rank():
+    from repro.experiments.stats import percentile
+    vals = [5.0, 1.0, 4.0, 2.0, 3.0]
+    assert percentile(vals, 0.0) == 1.0
+    assert percentile(vals, 50.0) == 3.0
+    assert percentile(vals, 99.0) == 5.0
+    assert percentile(vals, 100.0) == 5.0
+    assert percentile([7.5], 99.0) == 7.5
+    # nearest rank returns an actual sample, never an interpolation
+    assert percentile([1.0, 2.0], 50.0) == 1.0
+    assert percentile([1.0, 2.0], 51.0) == 2.0
+    with pytest.raises(ValueError, match="empty"):
+        percentile([], 50.0)
+    with pytest.raises(ValueError, match="0, 100"):
+        percentile(vals, 101.0)
+
+
+def test_latency_summary_folds_and_zero_cases():
+    from repro.experiments.stats import latency_summary
+    assert latency_summary([]) == {"n": 0, "mean": 0.0, "p50": 0.0,
+                                   "p99": 0.0}
+    s = latency_summary([0.01, 0.02, 0.03, 0.4])
+    assert s["n"] == 4
+    assert math.isclose(s["mean"], 0.115)
+    assert s["p50"] == 0.02 and s["p99"] == 0.4
+
+
+def _serve_record(scheduler: str, seed: int, p99_ms: float,
+                  throughput: float = 10.0):
+    from repro.experiments.metrics import RunRecord
+    return RunRecord(
+        trace_name="t", trace_seed=0, cluster={"num_machines": 4},
+        scheduler=scheduler, seed=seed, makespan=100.0,
+        throughput_jph=throughput, jobs_total=5, jobs_finished=5,
+        deadlines_met=5, locality_rate=1.0, speculative_launches=0,
+        events_processed=10, wall_time_s=0.1,
+        serve={"p99_ms": p99_ms} if p99_ms else {})
+
+
+def test_compare_serve_p99_pairs_and_signs():
+    from repro.experiments.stats import compare_serve_p99
+    a = [_serve_record("base", s, p99_ms=200.0 + s) for s in range(4)]
+    b = [_serve_record("harvest", s, p99_ms=100.0 + s) for s in range(4)]
+    cmpres = compare_serve_p99(a, b, n_boot=200)
+    assert cmpres.metric == "serve_p99_ms"
+    assert cmpres.n_pairs == 4
+    assert cmpres.mean_gain_pct > 0          # lower p99 == positive gain
+    assert cmpres.ci_lo_pct > 0
+    assert cmpres.win_rate == 1.0
+    with pytest.raises(ValueError, match="serving metrics"):
+        compare_serve_p99(a, [_serve_record("harvest", s, p99_ms=0.0)
+                              for s in range(4)])

@@ -159,6 +159,40 @@ def test_batch_order_and_size_invariance():
 
 
 @pytest.mark.fuzz
+def test_max_batch_override_is_result_invariant(monkeypatch):
+    """The sub-batch cap is a pure performance knob: kwarg and env-var
+    overrides resplit the vmap without moving a single byte of output."""
+    import repro.simcluster.surrogate as sg
+    assert sg._MAX_BATCH == 64                       # pinned default
+    cells = [_cell(policy=p, seed=s)
+             for p, s in [("proposed", 0), ("fair", 1), ("fifo", 2),
+                          ("delay", 0), ("proposed", 3)]]
+    base = [_fingerprint(r) for r in run_batch(cells)]
+    for cap in (1, 2, 3):
+        assert base == [_fingerprint(r)
+                        for r in run_batch(cells, max_batch=cap)], cap
+    monkeypatch.setenv("REPRO_SURROGATE_MAX_BATCH", "2")
+    assert base == [_fingerprint(r) for r in run_batch(cells)]
+    # the explicit kwarg wins over the env var
+    assert base == [_fingerprint(r) for r in run_batch(cells, max_batch=4)]
+
+
+def test_max_batch_resolution_precedence(monkeypatch):
+    from repro.simcluster.surrogate import _resolve_max_batch
+    monkeypatch.delenv("REPRO_SURROGATE_MAX_BATCH", raising=False)
+    assert _resolve_max_batch() == 64
+    assert _resolve_max_batch(7) == 7
+    monkeypatch.setenv("REPRO_SURROGATE_MAX_BATCH", "16")
+    assert _resolve_max_batch() == 16
+    assert _resolve_max_batch(3) == 3                # kwarg beats env
+    with pytest.raises(ValueError, match=">= 1"):
+        _resolve_max_batch(0)
+    monkeypatch.setenv("REPRO_SURROGATE_MAX_BATCH", "-5")
+    with pytest.raises(ValueError, match=">= 1"):
+        _resolve_max_batch()
+
+
+@pytest.mark.fuzz
 @pytest.mark.parametrize("seed", [0, 7])
 def test_byte_determinism_per_config_seed(seed):
     """Two fresh integrations of the same (config, seed) — including a
@@ -179,12 +213,13 @@ def test_seed_and_policy_actually_move_the_result():
 
 @pytest.mark.fuzz
 def test_every_unsupported_registry_policy_raises():
-    """The registry partitions cleanly: adaptive overload EWMAs are the
-    only oracle-only components, and each rejection is typed + attributed
-    rather than a silent approximation."""
+    """The registry partitions cleanly: the adaptive pressure EWMAs (and
+    the harvest preset built on them) are the only oracle-only
+    components, and each rejection is typed + attributed rather than a
+    silent approximation."""
     supported, rejected = partition_policies(surrogate_supported)
     assert supported == ["proposed", "fair", "fifo", "delay", "edf_nopark"]
-    assert rejected == ["adaptive", "adaptive_ra"]
+    assert rejected == ["adaptive", "adaptive_ra", "harvest"]
     for name in rejected:
         with pytest.raises(SurrogateUnsupported) as exc:
             lower_policy(PolicySpec.parse(name))
